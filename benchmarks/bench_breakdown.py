@@ -1,0 +1,99 @@
+"""Paper Fig. 13 + 14: insertion-phase breakdown and thread scaling."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SVFusionAdapter, csv_row
+from repro.core import update as U
+from repro.core.build import build_index, compute_e_in, rank_based_reorder
+from repro.core.search import _search_one
+from repro.core.types import SearchParams
+
+
+def phase_breakdown(n=5000, dim=32, batch=128, seed=0):
+    """Fig 13: time insert phases separately (candidate search / heuristic
+    reordering / reverse-edge add / bookkeeping)."""
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    st = build_index(vecs, degree=16, cache_slots=512, n_max=1 << 13)
+    newv = jnp.asarray(rng.normal(size=(batch, dim)), jnp.float32)
+    sp = SearchParams(k=10, pool=64, max_iters=96)
+    key = jax.random.PRNGKey(1)
+
+    search_fn = jax.jit(lambda g, c, q, e: jax.vmap(
+        lambda qq, ee: _search_one(g, c, qq, ee, sp._replace(k=sp.pool))
+    )(q, e))
+    entries = jax.random.randint(key, (batch, sp.pool), 0,
+                                 int(st.graph.n), dtype=jnp.int32)
+
+    def timed(fn, *args):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3, out
+
+    t_search, res = timed(search_fn, st.graph, st.cache, newv, entries)
+    reorder_fn = jax.jit(lambda ci, cd, nb: rank_based_reorder(
+        ci, cd, nb, st.graph.degree))
+    t_reorder, sel = timed(reorder_fn, res.ids, res.dists, st.graph.nbrs)
+    flat_t = sel.reshape(-1)
+    ids = st.graph.n + jnp.arange(batch, dtype=jnp.int32)
+    flat_new = jnp.repeat(ids, st.graph.degree)
+    d_rev = jnp.sum((st.graph.vectors[jnp.clip(flat_t, 0)]
+                     - st.graph.vectors[flat_new]) ** 2, -1)
+    rev_fn = jax.jit(lambda g, t, nn, d: U._reverse_edge_scatter(g, t, nn, d))
+    t_rev, _ = timed(rev_fn, st.graph, flat_t, flat_new, d_rev)
+    ein_fn = jax.jit(lambda nb: compute_e_in(nb, st.graph.capacity))
+    t_ein, _ = timed(ein_fn, st.graph.nbrs)
+
+    total = t_search + t_reorder + t_rev + t_ein
+    out = {"search_dist": t_search / total, "reorder": t_reorder / total,
+           "reverse_add": t_rev / total, "bookkeeping": t_ein / total,
+           "total_ms": total * 1e3}
+    csv_row("fig13_breakdown", total / batch * 1e6, **out)
+    return out
+
+
+def thread_scaling(n=4000, dim=32, threads=(1, 2, 4), n_batches=12):
+    """Fig 14: search throughput vs #streams (1-core container: expect
+    saturation at 1, mirroring the paper's diminishing returns >16)."""
+    import threading
+    rng = np.random.default_rng(0)
+    results = {}
+    for nt in threads:
+        idx = SVFusionAdapter(dim, degree=16, cache_slots=512,
+                              capacity=1 << 14)
+        idx.insert(rng.normal(size=(n, dim)).astype(np.float32))
+        q = rng.normal(size=(32, dim)).astype(np.float32)
+        idx.search(q)  # warm
+        done = []
+
+        def worker():
+            for _ in range(n_batches // nt):
+                idx.search(q, k=10)
+                done.append(32)
+
+        ths = [threading.Thread(target=worker) for _ in range(nt)]
+        t0 = time.perf_counter()
+        [t.start() for t in ths]
+        [t.join() for t in ths]
+        dt = time.perf_counter() - t0
+        qps = sum(done) / dt
+        results[nt] = qps
+        csv_row(f"fig14_threads_{nt}", 1e6 / max(qps, 1e-9), qps=qps)
+    return results
+
+
+def main():
+    return {"breakdown": phase_breakdown(), "threads": thread_scaling()}
+
+
+if __name__ == "__main__":
+    main()

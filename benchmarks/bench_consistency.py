@@ -1,0 +1,47 @@
+"""Paper Table 3: read-after-write consistency under interleaved 50/50
+insert+search batches — Recall@1 of the just-inserted vector, w/ and w/o
+the synchronization protocol."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.engine import EngineConfig, SVFusionEngine
+from repro.core.types import SearchParams
+from repro.utils import percentile
+
+
+def run(sync: bool, n_rounds=40, batch=10, dim=32, seed=0):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(1024, dim)).astype(np.float32)
+    eng = SVFusionEngine(base, EngineConfig(
+        degree=16, cache_slots=512, capacity=1 << 14,
+        search=SearchParams(k=1, pool=48, max_iters=64),
+        sync=sync, stale_refresh=8))
+    eng.search(base[:16])  # warm
+    hits, lats = [], []
+    for _ in range(n_rounds):
+        newv = rng.normal(size=(batch, dim)).astype(np.float32)
+        ids = eng.insert(newv)
+        t0 = time.perf_counter()
+        found, _ = eng.search(newv)          # should return the new vectors
+        lats.append(time.perf_counter() - t0)
+        hits.append(float((found[:, 0] == ids).mean()))
+    return {"recall_at_1": float(np.mean(hits)),
+            "p99_ms": percentile(lats, 99) * 1e3}
+
+
+def main():
+    results = {}
+    for sync in (True, False):
+        r = run(sync)
+        results[sync] = r
+        csv_row(f"table3_{'sync' if sync else 'nosync'}",
+                r["p99_ms"] * 1e3, **r)
+    return results
+
+
+if __name__ == "__main__":
+    main()

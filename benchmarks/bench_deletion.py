@@ -1,0 +1,75 @@
+"""Paper Fig. 12: deletion strategies — lazy only / lazy+global
+consolidation / full (lazy + localized repair + consolidation).
+
+Deletions are spatially clustered (paper Fig. 5: KNNG neighborhoods die
+together). Recall is evaluated after every deletion wave and averaged over
+the stream — the paper's point is that localized repair holds recall up
+*between* the rare global consolidations.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import update as U
+from repro.core.build import build_index
+from repro.core.search import brute_force_topk, recall_at_k, search_batch
+from repro.core.types import SearchParams
+
+
+def main(n=6000, dim=32, delete_frac=0.25, waves=8, seed=0):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    sp = SearchParams(k=10, pool=64, max_iters=96)
+    queries = rng.normal(size=(64, dim)).astype(np.float32)
+    # spatially clustered deletions
+    center = vecs[rng.integers(n)]
+    del_ids = np.argsort(((vecs - center) ** 2).sum(1))[:int(n * delete_frac)]
+
+    def eval_recall(st):
+        res = search_batch(st, queries, jax.random.PRNGKey(1), sp)
+        truth, _ = brute_force_topk(st.graph, queries, 10)
+        return float(recall_at_k(res.ids, truth))
+
+    # warm jit caches
+    warm = build_index(vecs, degree=16, cache_slots=512, n_max=1 << 13,
+                       seed=seed)
+    warm = U.delete_batch(warm, del_ids[:n // waves].astype(np.int32))
+    warm, _ = U.repair_affected(warm, max_repair=256)
+    eval_recall(warm)
+    jax.block_until_ready(U.consolidate(warm).graph.nbrs)
+
+    results = {}
+    for strategy in ("lazy", "lazy+consolidate", "full"):
+        st = build_index(vecs, degree=16, cache_slots=512, n_max=1 << 13,
+                         seed=seed)
+        overhead = 0.0
+        recalls = []
+        consolidations = 0
+        deleted_since = 0
+        for wave in np.array_split(del_ids, waves):
+            t0 = time.perf_counter()
+            st = U.delete_batch(st, wave.astype(np.int32))
+            deleted_since += len(wave)
+            if strategy == "full":
+                st, _ = U.repair_affected(st, max_repair=256)
+            if strategy != "lazy" and deleted_since >= 0.2 * n:
+                st = U.consolidate(st)   # paper: 20% new-deletion threshold
+                deleted_since = 0
+                consolidations += 1
+            jax.block_until_ready(st.graph.nbrs)
+            overhead += time.perf_counter() - t0
+            recalls.append(eval_recall(st))
+        results[strategy] = {"recall": float(np.mean(recalls)),
+                             "final_recall": recalls[-1],
+                             "overhead_s": overhead,
+                             "consolidations": consolidations}
+        csv_row(f"fig12_{strategy}", overhead * 1e6, **results[strategy])
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 8: p50/p95/p99 search+insert latency vs offered QPS
+(open-loop arrivals via the multi-stream runner)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SVFusionAdapter, csv_row
+from repro.core.engine import MultiStreamRunner
+from repro.utils import percentile
+
+
+def main(n=4000, dim=32, rates=(200, 1000, 4000), duration=3.0):
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(n, dim)).astype(np.float32)
+    results = {}
+    for rate in rates:
+        idx = SVFusionAdapter(dim, degree=16, cache_slots=768,
+                              capacity=1 << 15)
+        idx.insert(base)
+        idx.search(rng.normal(size=(8, dim)).astype(np.float32))  # warm jit
+        idx.search(rng.normal(size=(64, dim)).astype(np.float32))
+        runner = MultiStreamRunner(idx.engine, n_search_streams=2,
+                                   max_batch=64, batch_timeout=0.002)
+        runner.start()
+        t_end = time.perf_counter() + duration
+        interval = 8.0 / rate                    # 8 queries per request
+        nsub = 0
+        while time.perf_counter() < t_end:
+            runner.submit_search(
+                rng.normal(size=(8, dim)).astype(np.float32), tag=nsub)
+            if nsub % 10 == 0:
+                runner.submit_insert(
+                    rng.normal(size=(8, dim)).astype(np.float32))
+            nsub += 1
+            time.sleep(interval)
+        runner.drain_and_stop()
+        lats = sorted(r[2] for r in runner.results)
+        ins = sorted(idx.engine.latencies["insert"])
+        s = {
+            "p50_ms": percentile(lats, 50) * 1e3,
+            "p95_ms": percentile(lats, 95) * 1e3,
+            "p99_ms": percentile(lats, 99) * 1e3,
+            "insert_p99_ms": percentile(ins, 99) * 1e3 if ins else 0.0,
+            "completed": len(lats),
+        }
+        results[rate] = s
+        csv_row(f"fig8_qps_{rate}", s["p50_ms"] * 1e3, **s)
+    return results
+
+
+if __name__ == "__main__":
+    main()

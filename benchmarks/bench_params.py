@@ -1,0 +1,67 @@
+"""Paper Fig. 16 + 17: prediction-parameter ratio alpha/(alpha+beta) vs miss
+rate, and update batch-size sweep (throughput/latency/recall trade)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import SVFusionAdapter, csv_row, exact_topk, recall
+from repro.train.data import sliding_window
+from benchmarks.common import run_workload
+
+
+def alpha_beta_sweep(n=4000, dim=32, ratios=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0)):
+    """Fig 16: 0 = structure-only prediction, 1 = recency-only."""
+    results = {}
+    for r in ratios:
+        alpha, beta = r, 1.0 - r
+        idx = SVFusionAdapter(dim, degree=16, cache_slots=512,
+                              capacity=1 << 15, alpha=alpha, beta=beta)
+        wl = sliding_window(n=n, dim=dim, t_max=40)
+        m = run_workload(idx, wl, max_steps=45, name=f"ab_{r}")
+        s = m.summary()
+        results[r] = s
+        csv_row(f"fig16_ratio_{int(r*100)}", 1e6 / max(s["search_qps"], 1e-9),
+                miss_rate=s.get("miss_rate", 0), recall=s["recall"])
+    return results
+
+
+def batch_size_sweep(n=4000, dim=32, batches=(8, 32, 128, 512, 2048)):
+    """Fig 17: larger update batches raise throughput but delay visibility
+    and stretch tail latency."""
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n, dim)).astype(np.float32)
+    results = {}
+    for bs in batches:
+        idx = SVFusionAdapter(dim, degree=16, cache_slots=512,
+                              capacity=1 << 15)
+        idx.insert(data[:1024])
+        t0 = time.perf_counter()
+        inserted = 0
+        lat = []
+        for s in range(1024, min(n, 1024 + 4 * bs), bs):
+            t1 = time.perf_counter()
+            idx.insert(data[s:s + bs])
+            lat.append(time.perf_counter() - t1)
+            inserted += bs
+        dt = time.perf_counter() - t0
+        q = data[1024:1024 + 64] + rng.normal(
+            scale=0.05, size=(64, dim)).astype(np.float32)
+        found = idx.search(q)
+        ids_all = np.arange(1024 + inserted)
+        truth = exact_topk(ids_all, data[:1024 + inserted], q, 10)
+        rec = recall(found, truth)
+        results[bs] = {"insert_qps": inserted / dt,
+                       "p99_ms": max(lat) * 1e3, "recall": rec}
+        csv_row(f"fig17_batch_{bs}", dt / max(inserted, 1) * 1e6,
+                **results[bs])
+    return results
+
+
+def main():
+    return {"alpha_beta": alpha_beta_sweep(), "batch": batch_size_sweep()}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 7: recall / search throughput / insert throughput / miss rate
+across streaming workloads × methods."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SVFusionAdapter, csv_row, run_workload
+from repro.core.baselines import HNSW, Vamana, CagraStatic
+from repro.train.data import WORKLOADS
+
+
+def make_method(method, dim):
+    if method == "svfusion":
+        return SVFusionAdapter(dim, degree=16, cache_slots=768,
+                               capacity=1 << 15)
+    if method == "hnsw":
+        return HNSW(dim, M=12, ef_construction=64, ef_search=64)
+    if method == "vamana":
+        return Vamana(dim, R=16, L=48)
+    if method == "cagra_static":
+        return CagraStatic(dim, degree=16, rebuild_every=2048)
+    raise ValueError(method)
+
+
+def main(n=4000, dim=32, methods=("svfusion", "hnsw", "vamana",
+                                  "cagra_static"),
+         workloads=("sliding_window", "expiration_time", "clustered",
+                    "msturing_ih"), max_steps=60):
+    results = {}
+    for wname in workloads:
+        for method in methods:
+            if wname == "sliding_window":
+                wl = WORKLOADS[wname](n=n, dim=dim, t_max=50)
+            elif wname == "expiration_time":
+                wl = WORKLOADS[wname](n=n, dim=dim, t_max=40)
+            elif wname == "clustered":
+                wl = WORKLOADS[wname](n=n, dim=dim, rounds=3)
+            else:
+                wl = WORKLOADS[wname](n_start=n // 8, n_final=n, dim=dim,
+                                      n_ops=max_steps)
+            idx = make_method(method, dim)
+            m = run_workload(idx, wl, max_steps=max_steps,
+                             name=f"{wname}/{method}")
+            s = m.summary()
+            results[(wname, method)] = s
+            csv_row(f"fig7_{wname}_{method}",
+                    1e6 / max(s["search_qps"], 1e-9),
+                    recall=s["recall"], search_qps=s["search_qps"],
+                    insert_qps=s["insert_qps"],
+                    miss_rate=s.get("miss_rate", 0.0))
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark aggregator: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_breakdown, bench_cache, bench_consistency,
+                            bench_deletion, bench_disk, bench_gpu_methods,
+                            bench_latency, bench_params, bench_streaming)
+    benches = {
+        "streaming": bench_streaming.main,      # Fig 7
+        "latency": bench_latency.main,          # Fig 8
+        "cache": bench_cache.main,              # Fig 9 + 10
+        "disk": bench_disk.main,                # Fig 11
+        "deletion": bench_deletion.main,        # Fig 12
+        "breakdown": bench_breakdown.main,      # Fig 13 + 14
+        "gpu_methods": bench_gpu_methods.main,  # Fig 15
+        "params": bench_params.main,            # Fig 16 + 17
+        "consistency": bench_consistency.main,  # Table 3
+    }
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:
+            failures.append(name)
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: build an SVFusion index, search it, stream updates.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.engine import EngineConfig, SVFusionEngine
+from repro.core.types import SearchParams
+
+
+def main():
+    rng = np.random.default_rng(0)
+    dim = 64
+    base = rng.normal(size=(20_000, dim)).astype(np.float32)
+
+    print("building index (20k x 64)...")
+    engine = SVFusionEngine(base, EngineConfig(
+        degree=32, cache_slots=2048, capacity=1 << 16,
+        search=SearchParams(k=10, pool=64, max_iters=96)))
+
+    queries = base[:8] + rng.normal(scale=0.05, size=(8, dim)).astype(np.float32)
+    ids, dists = engine.search(queries)
+    print("top-1 self-hit:", (ids[:, 0] == np.arange(8)).mean())
+
+    print("inserting 1k fresh vectors...")
+    fresh = rng.normal(size=(1024, dim)).astype(np.float32)
+    new_ids = engine.insert(fresh)
+    got, _ = engine.search(fresh[:16])
+    print("read-after-write@1:", (got[:, 0] == new_ids[:16]).mean())
+
+    print("deleting 3k vectors (lazy + async repair)...")
+    engine.delete(np.arange(3000))
+    engine.wait_background()
+    print("stats:", engine.stats())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""SVFusion's own production configuration (the paper's architecture).
+
+Deep1B (paper Table 2): N=1,000,000,000 vectors, D=96 (image descriptors),
+fixed out-degree 32 KNN graph, pool L=64, k=10, 10,240-query batches.
+MSTuring-200M (D=100) is the second config. Shapes/cells are defined in
+``repro.launch.steps.SVF_SHAPES``; this module exposes them in the configs
+namespace alongside the LM architectures and provides the reduced smoke
+setup used by tests.
+
+Placement on the production mesh (see core/distributed.py): the capacity
+tier (vectors + graph + bitset) shards over every mesh axis — 1B x 96 fp32
+= 384 GB vectors + 128 GB graph -> 2.1 GB/chip on 256 chips; each chip's
+hot cache covers its shard (131,072 slots = 48 MB); queries are replicated
+and per-shard top-k results merge hierarchically over the mesh axes.
+"""
+from repro.core.types import SearchParams
+
+DEEP1B = dict(
+    name="svfusion_deep1b",
+    n=1_000_000_000, dim=96, degree=32,
+    query_batch=10_240,
+    cache_slots_per_chip=131_072,
+    search=SearchParams(k=10, pool=64, max_iters=64),
+)
+
+MSTURING = dict(
+    name="svfusion_msturing",
+    n=200_000_000, dim=100, degree=32,
+    query_batch=1_024,
+    cache_slots_per_chip=131_072,
+    search=SearchParams(k=10, pool=64, max_iters=64),
+)
+
+
+def smoke_config() -> dict:
+    """Reduced same-family setup: used by tests/test_core.py and
+    tests/test_distributed.py (small N, same algorithms end-to-end)."""
+    return dict(name="svfusion_smoke", n=2_000, dim=16, degree=8,
+                query_batch=32, cache_slots_per_chip=64,
+                search=SearchParams(k=10, pool=48, max_iters=64))

@@ -1,0 +1,164 @@
+"""Workload-Aware Vector Placement (paper §4.3, Algorithm 2) + baselines.
+
+The prediction function F_λ(x) = α·F_recent(x,t) + β·log(1+E_in(x)) reduces
+the gain test gain(x) > 0 to the threshold test F_λ(x) > θ with
+θ = T_transfer/(T_CPU − T_GPU) (paper's theoretical analysis). Placement is
+applied once per search batch with transfers amortized over the batch
+(paper: 2048-vector transfer batches).
+
+Eviction is the paper's clock-sweep with predicted-frequency tie-break,
+*vectorized* for the TPU (DESIGN.md §2): empty slots are used first, then
+slots with reference bit 0 in ascending F_λ; ref bits are refreshed by the
+batch's cache hits (one sweep per batch). An exact sequential clock lives in
+``clock_reference.py`` as the semantics oracle for tests.
+
+Baseline policies (paper §6.3): LRU, LFU, LRFU, ``never`` (w/o WAVP — always
+compute misses on the capacity tier), ``always`` (promote every miss).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CacheState, GraphState, IndexState, SearchParams, Stats
+
+
+def f_lambda(cache: CacheState, graph: GraphState):
+    """F_λ(x) = α·F_recent + β·log(1+E_in) (paper eq. 2)."""
+    return (cache.alpha * cache.f_recent
+            + cache.beta * jnp.log1p(graph.e_in.astype(jnp.float32)))
+
+
+def _policy_scores(policy, cache, graph):
+    """Higher score = more worth caching. f_recent holds the policy's own
+    statistic: timestamps for LRU, raw counts for LFU, decayed counts (CRF)
+    for LRFU/WAVP."""
+    if policy in ("wavp", "always"):
+        return f_lambda(cache, graph)
+    return cache.f_recent
+
+
+@partial(jax.jit, static_argnames=("sp",))
+def apply_wavp(state: IndexState, acc_ids, acc_hit, sp: SearchParams,
+               now=0) -> IndexState:
+    """Post-batch placement pass (Algorithm 2, batched).
+
+    acc_ids [B, I*R] accessed ids (-1 pad), acc_hit [B, I*R] hit flags.
+    """
+    graph, cache, stats = state
+    N = graph.capacity
+    M = cache.n_slots
+
+    ids = acc_ids.reshape(-1)
+    hit = acc_hit.reshape(-1)
+    valid = ids >= 0
+    cid = jnp.clip(ids, 0)
+
+    counts = jnp.zeros((N,), jnp.float32).at[cid].add(valid.astype(jnp.float32))
+    miss_counts = jnp.zeros((N,), jnp.float32).at[cid].add(
+        (valid & ~hit).astype(jnp.float32))
+
+    if sp.policy == "lru":
+        f_recent = jnp.where(counts > 0, jnp.float32(now) + 1.0,
+                             cache.f_recent)
+    else:
+        decay = jnp.float32(1.0 if sp.policy == "lfu" else sp.decay)
+        f_recent = cache.f_recent * decay + counts
+    cache = cache._replace(f_recent=f_recent)
+
+    n_acc = valid.sum()
+    n_hit = (valid & hit).sum()
+    stats = stats._replace(
+        accesses=stats.accesses + n_acc.astype(jnp.int32),
+        hits=stats.hits + n_hit.astype(jnp.int32),
+        misses=stats.misses + (n_acc - n_hit).astype(jnp.int32),
+    )
+
+    if sp.policy == "never":
+        # w/o WAVP: all misses computed in place on the capacity tier
+        stats = stats._replace(cpu_computed=stats.cpu_computed
+                               + (n_acc - n_hit).astype(jnp.int32))
+        return IndexState(graph, cache, stats)
+
+    score = _policy_scores(sp.policy, cache, graph)
+
+    # ---- selective prefetch (Alg. 2 lines 1-2): F_λ(x) > θ to promote ----
+    thr = cache.theta if sp.policy == "wavp" else jnp.float32(-jnp.inf)
+    cand_mask = (miss_counts > 0) & (cache.h2d < 0) & graph.alive \
+        & (score > thr)
+    cand_score = jnp.where(cand_mask, score, -jnp.inf)
+    P = min(sp.max_promote, M)
+    prom_score, prom_ids = jax.lax.top_k(cand_score, P)
+    prom_valid = jnp.isfinite(prom_score)
+
+    # ---- predictive replacement (Alg. 2 lines 3-11), vectorized clock ----
+    occ_score = jnp.where(cache.slot_hid >= 0,
+                          score[jnp.clip(cache.slot_hid, 0)], -jnp.inf)
+    # eviction priority: empty slots first, then ref==0 by ascending F_λ;
+    # ref==1 slots are protected this sweep (second chance).
+    empty = cache.slot_hid < 0
+    protected = (cache.ref > 0) & ~empty
+    evict_key = jnp.where(empty, -jnp.inf,
+                          jnp.where(protected, jnp.inf, occ_score))
+    victim_order = jnp.argsort(evict_key)
+    victims = victim_order[:P]
+    victim_ok = ~protected[victims]
+    # only evict a victim whose score is lower than the incomer's
+    improves = prom_valid & victim_ok & (
+        (evict_key[victims] < prom_score) | empty[victims])
+
+    vslot = jnp.where(improves, victims, M)        # M = scatter no-op row
+    old_hid = jnp.where(improves, cache.slot_hid[jnp.clip(victims, 0)], -1)
+    new_hid = jnp.where(improves, prom_ids, -1)
+
+    h2d = cache.h2d.at[jnp.clip(old_hid, 0)].set(
+        jnp.where(old_hid >= 0, -1, cache.h2d[jnp.clip(old_hid, 0)]))
+    h2d = h2d.at[jnp.clip(new_hid, 0)].set(
+        jnp.where(new_hid >= 0, vslot.astype(jnp.int32),
+                  h2d[jnp.clip(new_hid, 0)]))
+
+    slot_hid = jnp.concatenate([cache.slot_hid, jnp.full((1,), -1, jnp.int32)])
+    slot_hid = slot_hid.at[vslot].set(jnp.where(improves, new_hid, -1))[:M]
+    vec_pad = jnp.concatenate([cache.vectors,
+                               jnp.zeros((1, cache.vectors.shape[1]))], 0)
+    vec_pad = vec_pad.at[vslot].set(graph.vectors[jnp.clip(new_hid, 0)])
+    vectors = vec_pad[:M]
+    ver_pad = jnp.concatenate([cache.slot_ver, jnp.zeros((1,), jnp.int32)])
+    ver_pad = ver_pad.at[vslot].set(graph.version[jnp.clip(new_hid, 0)])
+
+    # clock ref refresh: slots hit this batch get a second chance
+    hit_slot = jnp.where(valid & hit, cache.h2d[cid], -1)
+    ref = jnp.zeros((M + 1,), jnp.int8).at[jnp.clip(hit_slot, 0)].set(
+        jnp.int8(1))
+    ref = ref.at[vslot].set(jnp.int8(1))[:M]       # fresh entries referenced
+
+    n_prom = improves.sum().astype(jnp.int32)
+    n_evict = (improves & (old_hid >= 0)).sum().astype(jnp.int32)
+    cache = cache._replace(vectors=vectors, slot_hid=slot_hid, h2d=h2d,
+                           ref=ref, slot_ver=ver_pad[:M])
+
+    # ---- θ adaptation (paper §4.4): more selective when misses rise with
+    # high predicted demand ----
+    if sp.policy == "wavp":
+        miss_rate = (n_acc - n_hit) / jnp.maximum(n_acc, 1)
+        mean_f = jnp.where(cand_mask, score, 0.0).sum() / jnp.maximum(
+            cand_mask.sum(), 1)
+        pressure = miss_rate * mean_f
+        theta = jnp.clip(cache.theta * 0.95 + 0.05 * pressure, 1e-3, 1e6)
+        cache = cache._replace(theta=theta)
+
+    stats = stats._replace(
+        promotions=stats.promotions + n_prom,
+        evictions=stats.evictions + n_evict,
+        transfers=stats.transfers + n_prom,
+        cpu_computed=stats.cpu_computed
+        + (n_acc - n_hit).astype(jnp.int32) - n_prom)
+    return IndexState(graph, cache, stats)
+
+
+def miss_rate(stats: Stats) -> float:
+    a = max(int(stats.accesses), 1)
+    return float(stats.misses) / a

@@ -1,0 +1,77 @@
+"""Cost-model calibration for the WAVP gain function (paper §4.3).
+
+gain(x) = λ_x · (T_CPU − T_GPU) − T_transfer, θ = T_transfer/(T_CPU − T_GPU).
+
+Two sources:
+* ``v5e_constants()`` — analytical TPU v5e numbers used by the dry-run
+  roofline and the production θ default (ICI plays PCIe's role, DESIGN §2).
+* ``measure()`` — wall-clock microbenchmarks on the current runtime, used
+  by CPU-side benchmarks so θ reflects the machine the benches run on.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CostModel:
+    t_fast: float      # per-vector distance time on the bandwidth tier (s)
+    t_slow: float      # per-vector distance time on the capacity tier (s)
+    t_transfer: float  # per-vector transfer cost, amortized over batch (s)
+    batch: int = 2048  # paper's transfer amortization batch
+
+    @property
+    def theta(self) -> float:
+        denom = max(self.t_slow - self.t_fast, 1e-12)
+        return self.t_transfer / denom
+
+
+def v5e_constants(dim: int, dtype_bytes: int = 4) -> CostModel:
+    """Analytical v5e: fast tier = local HBM (819 GB/s), slow tier = remote
+    shard over ICI (~50 GB/s effective per chip) + compute-at-owner,
+    transfer = ICI bulk move amortized over 2048-vector batches."""
+    bytes_per_vec = dim * dtype_bytes
+    t_fast = bytes_per_vec / 819e9
+    t_slow = bytes_per_vec / 50e9          # dominated by ICI result/row move
+    t_transfer = bytes_per_vec / 50e9      # same wire, bulk-amortized
+    return CostModel(t_fast, t_slow, t_transfer)
+
+
+def measure(dim: int = 64, n: int = 4096, reps: int = 5) -> CostModel:
+    """Microbenchmark the actual runtime (CPU container): distance compute
+    from a small 'cache' table vs the big table, plus host->device copy."""
+    key = jax.random.PRNGKey(0)
+    small = jax.random.normal(key, (n, dim))
+    big = jax.random.normal(key, (16 * n, dim))
+    q = jax.random.normal(key, (dim,))
+    idx = jax.random.randint(key, (n,), 0, n)
+
+    @jax.jit
+    def dist(table, ids, q):
+        x = table[ids]
+        return jnp.sum((x - q) ** 2, axis=1)
+
+    def bench(fn):
+        fn().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn().block_until_ready()
+        return (time.perf_counter() - t0) / (reps * n)
+
+    t_fast = bench(lambda: dist(small, idx, q))
+    t_slow = bench(lambda: dist(big, idx * 16, q))
+    host = np.asarray(small)
+
+    def xfer():
+        return jax.device_put(host).block_until_ready()
+    xfer()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        xfer()
+    t_transfer = (time.perf_counter() - t0) / (reps * n)
+    return CostModel(t_fast, max(t_slow, t_fast * 1.01), t_transfer)

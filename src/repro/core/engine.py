@@ -1,0 +1,358 @@
+"""Host-side streaming engine: concurrency control + real-time coordination
+(paper §4.4, §5.3).
+
+The CUDA multi-stream design maps to host dispatch threads over immutable
+jitted programs (DESIGN.md §2): search streams read the last *published*
+state snapshot concurrently; a dedicated update stream serializes
+insert/delete batches; background consolidation runs on an MVCC snapshot
+and merges without blocking foreground traffic.
+
+Consistency guarantees (paper Table 3):
+* ``sync=True`` — updates publish atomically under the state lock before
+  returning; every subsequent search observes them (read-after-write).
+* ``sync=False`` — the ablation: searches read a stale snapshot refreshed
+  every ``stale_refresh`` operations, reproducing the paper's
+  no-synchronization recall collapse under load.
+
+Also here: adaptive batching (latency/throughput trade, paper Fig. 17),
+cold-start warmup (§4.4), deletion-triggered repair/consolidation
+scheduling (§5.2), bounded-version policy (§5.3).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as Cache
+from repro.core import mvcc, update
+from repro.core.build import build_index
+from repro.core.search import search_batch
+from repro.core.types import IndexState, SearchParams
+
+
+@dataclass
+class EngineConfig:
+    degree: int = 32
+    cache_slots: int = 4096
+    capacity: int = 1 << 16
+    search: SearchParams = field(default_factory=SearchParams)
+    repair_every: int = 8          # update batches between repair scans
+    repair_budget: int = 256
+    consolidate_threshold: float = 0.2   # paper: 20% deleted
+    repair_threshold: float = 0.5        # paper: >50% dead neighbors
+    max_versions: int = 2                # bounded-version policy
+    sync: bool = True
+    stale_refresh: int = 64              # ops between refreshes when !sync
+    seed: int = 0
+
+
+class SVFusionEngine:
+    """Thread-safe streaming SANNS engine over the functional core."""
+
+    def __init__(self, init_vectors, cfg: EngineConfig):
+        self.cfg = cfg
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._state_lock = threading.RLock()   # publish/subscribe
+        self._update_lock = threading.Lock()   # serializes the update stream
+        self._cache_lock = threading.Lock()
+        self._state = build_index(
+            np.asarray(init_vectors, np.float32), degree=cfg.degree,
+            cache_slots=cfg.cache_slots, n_max=cfg.capacity)
+        self._stale_state = self._state
+        self._ops_since_refresh = 0
+        self._update_batches = 0
+        self._consolidations = 0
+        self._active_versions = 0
+        self._rev_logs: list = []
+        self._snapshot_n: Optional[int] = None
+        self._bg_threads: list = []
+        self.latencies: dict[str, list] = {"search": [], "insert": [],
+                                           "delete": []}
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        with self._cache_lock:
+            self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _read_state(self) -> IndexState:
+        if self.cfg.sync:
+            with self._state_lock:
+                return self._state
+        # no-sync ablation: stale snapshot, periodically refreshed
+        self._ops_since_refresh += 1
+        if self._ops_since_refresh >= self.cfg.stale_refresh:
+            self._ops_since_refresh = 0
+            with self._state_lock:
+                self._stale_state = self._state
+        return self._stale_state
+
+    def _publish(self, state: IndexState):
+        with self._state_lock:
+            self._state = state
+
+    # ------------------------------------------------------------------
+    def search(self, queries, update_cache=True):
+        """Batched search. Returns (ids, dists) as numpy. Batches are padded
+        to power-of-two buckets to bound the number of jit specializations."""
+        t0 = time.perf_counter()
+        st = self._read_state()
+        queries = jnp.asarray(queries, jnp.float32)
+        B = queries.shape[0]
+        Bp = 1 << max(0, (B - 1)).bit_length()
+        if Bp != B:
+            queries = jnp.concatenate(
+                [queries, jnp.zeros((Bp - B, queries.shape[1]), queries.dtype)])
+        res = search_batch(st, queries, self._next_key(), self.cfg.search)
+        if Bp != B:
+            lane = jnp.arange(Bp)[:, None] < B   # mask pad lanes out of logs
+            res = res._replace(ids=res.ids[:B], dists=res.dists[:B],
+                               acc_ids=jnp.where(lane, res.acc_ids, -1),
+                               acc_hit=res.acc_hit & lane)
+        ids = np.asarray(res.ids)
+        if update_cache:
+            # cache placement is applied to the *current* state (the cache
+            # tier is shared; graph fields pass through untouched)
+            with self._state_lock:
+                cur = self._state
+                new = Cache.apply_wavp(cur._replace(cache=cur.cache),
+                                       res.acc_ids, res.acc_hit,
+                                       self.cfg.search,
+                                       now=self._update_batches)
+                self._state = cur._replace(cache=new.cache, stats=new.stats)
+        self.latencies["search"].append(time.perf_counter() - t0)
+        return ids, np.asarray(res.dists)
+
+    def insert(self, vectors, chunk=512):
+        """Insert vectors (chunked so each chunk links into the graph the
+        previous chunks built; a near-empty index is bootstrapped with an
+        exact KNN stitch among the first chunk)."""
+        t0 = time.perf_counter()
+        vectors = np.asarray(vectors, np.float32)
+        out = []
+        with self._update_lock:
+            for s in range(0, len(vectors), chunk):
+                part = jnp.asarray(vectors[s:s + chunk])
+                st = self._state
+                if int(st.graph.alive.sum()) < 2 * self.cfg.degree:
+                    st2, ids = self._bootstrap_insert(st, part)
+                    rev = None
+                else:
+                    st2, ids, rev = update.insert_batch(
+                        st, part, self._next_key(), self.cfg.search)
+                if rev is not None and self._snapshot_n is not None:
+                    self._rev_logs.append(rev)
+                self._publish(st2)
+                self._update_batches += 1
+                out.append(np.asarray(ids))
+        self._maybe_maintain()
+        self.latencies["insert"].append(time.perf_counter() - t0)
+        return np.concatenate(out)
+
+    def _bootstrap_insert(self, st, part):
+        """Exact-KNN stitch for a (near-)empty index."""
+        from repro.core.build import _exact_knn, compute_e_in
+        g = st.graph
+        n0 = int(g.n)
+        bi = part.shape[0]
+        ids = n0 + jnp.arange(bi, dtype=jnp.int32)
+        vectors = g.vectors.at[ids].set(part)
+        alive = g.alive.at[ids].set(True)
+        live_ids = np.where(np.asarray(alive[:n0 + bi]))[0]
+        sub = vectors[jnp.asarray(live_ids)]
+        knn = _exact_knn(sub, min(g.degree, max(1, len(live_ids) - 1)))
+        rows = jnp.asarray(live_ids)[jnp.clip(knn, 0)]
+        rows = jnp.where(knn >= 0, rows, -1)
+        pad = g.degree - rows.shape[1]
+        if pad > 0:
+            rows = jnp.concatenate(
+                [rows, jnp.full((rows.shape[0], pad), -1, jnp.int32)], 1)
+        nbrs = g.nbrs.at[jnp.asarray(live_ids)].set(rows.astype(jnp.int32))
+        g = g._replace(vectors=vectors, alive=alive, nbrs=nbrs,
+                       n=jnp.asarray(n0 + bi, jnp.int32))
+        g = g._replace(e_in=compute_e_in(g.nbrs, g.capacity))
+        return st._replace(graph=g), ids
+
+    def delete(self, ids):
+        t0 = time.perf_counter()
+        with self._update_lock:
+            st2 = update.delete_batch(self._state,
+                                      jnp.asarray(ids, jnp.int32))
+            self._publish(st2)
+            self._update_batches += 1
+        self._maybe_maintain()
+        self.latencies["delete"].append(time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    def _maybe_maintain(self):
+        if self._update_batches % self.cfg.repair_every == 0:
+            with self._update_lock:
+                st, nrep = update.repair_affected(
+                    self._state, max_repair=self.cfg.repair_budget,
+                    threshold=self.cfg.repair_threshold)
+                self._publish(st)
+        frac = float(update.deleted_fraction(self._state.graph))
+        if frac >= self.cfg.consolidate_threshold:
+            self.consolidate_async()
+
+    def consolidate_async(self, wait=False):
+        """Background global consolidation on an MVCC snapshot."""
+        with self._state_lock:
+            if self._snapshot_n is not None:
+                return None  # a version is already in flight: defer
+            if self._active_versions >= self.cfg.max_versions:
+                return None  # bounded-version policy: defer
+            snapshot = self._state
+            snap_n = int(snapshot.graph.n)
+            self._snapshot_n = snap_n
+            self._rev_logs = []
+            self._active_versions += 1
+
+        def work():
+            consolidated = update.consolidate(snapshot)
+            jax.block_until_ready(consolidated.graph.nbrs)
+            with self._update_lock, self._state_lock:
+                log = mvcc.concat_rev_logs(self._rev_logs)
+                merged = mvcc.merge_consolidated(
+                    consolidated, self._state,
+                    jnp.asarray(snap_n, jnp.int32), log)
+                self._state = merged
+                self._snapshot_n = None
+                self._rev_logs = []
+                self._active_versions -= 1
+                self._consolidations += 1
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        self._bg_threads.append(th)
+        if wait:
+            th.join()
+        return th
+
+    def wait_background(self):
+        for th in self._bg_threads:
+            th.join()
+        self._bg_threads = []
+
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> IndexState:
+        with self._state_lock:
+            return self._state
+
+    def stats(self) -> dict:
+        s = self.state.stats
+        d = {k: int(v) for k, v in s._asdict().items()}
+        d["miss_rate"] = Cache.miss_rate(s)
+        d["n"] = int(self.state.graph.n)
+        d["alive"] = int(self.state.graph.alive.sum())
+        d["consolidations"] = self._consolidations
+        # modeled per-access time on v5e (DESIGN.md §2): this machine has
+        # one physical tier, so tier economics are reported via the
+        # calibrated cost model applied to observed hit/miss/transfer counts
+        from repro.core.calibrate import v5e_constants
+        cm = v5e_constants(self.state.graph.vectors.shape[1])
+        acc = max(d["accesses"], 1)
+        modeled = (d["hits"] * cm.t_fast + d["cpu_computed"] * cm.t_slow
+                   + d["transfers"] * cm.t_transfer)
+        d["modeled_us_per_access"] = modeled / acc * 1e6
+        return d
+
+
+class MultiStreamRunner:
+    """Search/update streams over the engine (the multi-stream analogue):
+    N search worker threads + one dedicated update stream consuming an op
+    queue with adaptive batching."""
+
+    def __init__(self, engine: SVFusionEngine, n_search_streams=2,
+                 max_batch=64, batch_timeout=0.002):
+        self.engine = engine
+        self.n_search_streams = n_search_streams
+        self.max_batch = max_batch
+        self.batch_timeout = batch_timeout
+        self._q: queue.Queue = queue.Queue()
+        self._sq: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._threads = []
+        self.results: list = []
+        self.errors: list = []
+
+    def start(self):
+        self._threads = [threading.Thread(target=self._update_worker,
+                                          daemon=True)]
+        for _ in range(self.n_search_streams):
+            self._threads.append(threading.Thread(target=self._search_worker,
+                                                  daemon=True))
+        for t in self._threads:
+            t.start()
+
+    def submit_search(self, queries, tag=None):
+        self._sq.put((np.asarray(queries, np.float32), tag, time.perf_counter()))
+
+    def submit_insert(self, vectors):
+        self._q.put(("insert", np.asarray(vectors, np.float32)))
+
+    def submit_delete(self, ids):
+        self._q.put(("delete", np.asarray(ids, np.int64)))
+
+    def _drain(self, q, first):
+        """Adaptive batching: collect up to max_batch items within timeout."""
+        items = [first]
+        deadline = time.perf_counter() + self.batch_timeout
+        while len(items) < self.max_batch:
+            try:
+                items.append(q.get(timeout=max(0.0, deadline - time.perf_counter())))
+            except queue.Empty:
+                break
+        return items
+
+    def _search_worker(self):
+        while not self._stop.is_set():
+            try:
+                first = self._sq.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            items = self._drain(self._sq, first)
+            try:
+                qs = np.concatenate([i[0] for i in items], axis=0)
+                ids, dists = self.engine.search(qs)
+                off = 0
+                for qarr, tag, t0 in items:
+                    b = qarr.shape[0]
+                    self.results.append((tag, ids[off:off + b],
+                                         time.perf_counter() - t0))
+                    off += b
+            except Exception as e:  # pragma: no cover
+                self.errors.append(e)
+
+    def _update_worker(self):
+        while not self._stop.is_set():
+            try:
+                op, payload = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            try:
+                if op == "insert":
+                    self.engine.insert(payload)
+                else:
+                    self.engine.delete(payload)
+            except Exception as e:  # pragma: no cover
+                self.errors.append(e)
+
+    def drain_and_stop(self, timeout=60.0):
+        t0 = time.perf_counter()
+        while (not self._sq.empty() or not self._q.empty()) \
+                and time.perf_counter() - t0 < timeout:
+            time.sleep(0.01)
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        if self.errors:
+            raise self.errors[0]

@@ -1,0 +1,63 @@
+"""Multi-version mechanism (paper §5.3).
+
+A consolidation (or large repair) runs on an immutable snapshot G_t0 while
+foreground inserts/deletes/searches continue on the active graph G_t1.
+At completion the background result G'_t0 is merged:
+
+* **Incremental subgraph appending** — vertices inserted after the snapshot
+  (id >= snapshot_n) keep their active-graph rows verbatim.
+* **Reverse-edge integration** — reverse-edge triplets (v, v_new, d) logged
+  during the window are re-applied onto the consolidated rows of old
+  vertices.
+* deletions that happened during the window stay authoritative (the alive
+  bitset is taken from the active graph).
+
+A bounded-version policy (engine.py) defers new snapshots once the limit is
+reached.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import GraphState, IndexState
+from repro.core.build import compute_e_in
+from repro.core.update import RevLog, _reverse_edge_scatter
+
+
+@jax.jit
+def merge_consolidated(consolidated: IndexState, active: IndexState,
+                       snapshot_n, rev_log: RevLog) -> IndexState:
+    """Merge background-consolidated snapshot into the active state."""
+    gc, ga = consolidated.graph, active.graph
+    N = ga.capacity
+    is_new = jnp.arange(N, dtype=jnp.int32) >= snapshot_n
+
+    # old rows from the consolidated graph, new rows appended from active
+    nbrs = jnp.where(is_new[:, None], ga.nbrs, gc.nbrs)
+    graph = ga._replace(nbrs=nbrs)
+
+    # re-apply window reverse edges onto consolidated old rows
+    apply_mask = (rev_log.v >= 0) & (rev_log.v < snapshot_n) \
+        & graph.alive[jnp.clip(rev_log.v, 0)] \
+        & graph.alive[jnp.clip(rev_log.v_new, 0)]
+    targets = jnp.where(apply_mask, rev_log.v, -1)
+    nbrs = _reverse_edge_scatter(graph, targets, rev_log.v_new, rev_log.d)
+    graph = graph._replace(nbrs=nbrs,
+                           e_in=compute_e_in(nbrs, N),
+                           version=jnp.maximum(ga.version, gc.version) + 1)
+    return IndexState(graph, active.cache, active.stats)
+
+
+def empty_rev_log() -> RevLog:
+    z = jnp.zeros((0,), jnp.int32)
+    return RevLog(z, z, jnp.zeros((0,), jnp.float32))
+
+
+def concat_rev_logs(logs) -> RevLog:
+    logs = [l for l in logs if l.v.shape[0]]
+    if not logs:
+        return empty_rev_log()
+    return RevLog(jnp.concatenate([l.v for l in logs]),
+                  jnp.concatenate([l.v_new for l in logs]),
+                  jnp.concatenate([l.d for l in logs]))

@@ -1,0 +1,138 @@
+"""ANNS with CPU-GPU co-processing (paper Algorithm 1), TPU adaptation.
+
+Batched greedy beam search: one vmap lane per query (the paper's
+one-thread-block-per-query), neighbor expansion restructured as batched
+gather + distance GEMV on the MXU. Each expansion consults the cache
+mapping table; hits read the bandwidth-tier copy, misses read the capacity
+tier and are logged so the post-batch WAVP pass (cache.py) can decide
+promote-vs-compute-in-place with batch-amortized transfer cost (the paper
+amortizes T_transfer over batches of 2048).
+
+Returns per-query top-k plus the access/hit logs consumed by
+``repro.core.cache.apply_wavp``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CacheState, GraphState, IndexState, SearchParams
+
+INF = jnp.float32(jnp.inf)
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array        # [B, k]
+    dists: jax.Array      # [B, k]
+    acc_ids: jax.Array    # [B, I*R] accessed vertex ids (-1 pad)
+    acc_hit: jax.Array    # [B, I*R] cache-hit flags
+    iters: jax.Array      # [B] iterations used
+
+
+def _gather_tiered(graph: GraphState, cache: CacheState, ids):
+    """Fetch vectors for ids through the tier hierarchy: cached rows come
+    from the bandwidth tier, the rest from the capacity tier."""
+    slot = cache.h2d[jnp.clip(ids, 0)]
+    hit = (slot >= 0) & (ids >= 0)
+    dev = cache.vectors[jnp.clip(slot, 0)]
+    host = graph.vectors[jnp.clip(ids, 0)]
+    # NB: no astype here — converting gathered rows makes XLA hoist a full
+    # fp32 copy of the table; distances accumulate in fp32 via einsum
+    return jnp.where(hit[:, None], dev, host), hit
+
+
+def _sqdist(x, q):
+    """Squared L2 with fp32 accumulation over (possibly bf16) operands."""
+    diff = x - q
+    return jnp.einsum("kd,kd->k", diff, diff,
+                      preferred_element_type=jnp.float32)
+
+
+def _search_one(graph: GraphState, cache: CacheState, q, entry_ids,
+                sp: SearchParams):
+    L = sp.pool
+    R = graph.degree
+    I = sp.max_iters
+    q = q.astype(graph.vectors.dtype)
+
+    ev, _ = _gather_tiered(graph, cache, entry_ids)
+    d0 = _sqdist(ev, q)
+    d0 = jnp.where(graph.alive[entry_ids], d0, INF)
+    # dedup entry ids
+    dup = jnp.triu(entry_ids[:, None] == entry_ids[None, :], k=1).any(0)
+    d0 = jnp.where(dup, INF, d0)
+    order = jnp.argsort(d0)
+    ids0, dist0 = entry_ids[order], d0[order]
+    visited0 = jnp.zeros((L,), bool)
+
+    acc_ids0 = jnp.full((I, R), -1, jnp.int32)
+    acc_hit0 = jnp.zeros((I, R), bool)
+
+    def cond(s):
+        it, ids, dists, visited, *_ = s
+        frontier = (~visited) & jnp.isfinite(dists)
+        return (it < I) & frontier.any()
+
+    def body(s):
+        it, ids, dists, visited, acc_ids, acc_hit = s
+        sel = jnp.where(visited | ~jnp.isfinite(dists), INF, dists)
+        best = jnp.argmin(sel)
+        curr = ids[best]
+        visited = visited.at[best].set(True)
+
+        nb = graph.nbrs[jnp.clip(curr, 0)]
+        valid = (nb >= 0) & graph.alive[jnp.clip(nb, 0)]
+        xv, hit = _gather_tiered(graph, cache, nb)
+        d = _sqdist(xv, q)
+        # drop invalid + already-in-pool duplicates
+        in_pool = (nb[:, None] == ids[None, :]).any(1)
+        d = jnp.where(valid & ~in_pool, d, INF)
+
+        all_ids = jnp.concatenate([ids, nb])
+        all_d = jnp.concatenate([dists, d])
+        all_vis = jnp.concatenate([visited, jnp.zeros((R,), bool)])
+        keep = jnp.argsort(all_d)[:L]
+        ids, dists, visited = all_ids[keep], all_d[keep], all_vis[keep]
+
+        acc_ids = acc_ids.at[it].set(jnp.where(valid, nb, -1))
+        acc_hit = acc_hit.at[it].set(hit & valid)
+        return it + 1, ids, dists, visited, acc_ids, acc_hit
+
+    it, ids, dists, visited, acc_ids, acc_hit = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), ids0, dist0, visited0, acc_ids0, acc_hit0))
+
+    topk_ids = jnp.where(jnp.isfinite(dists[:sp.k]), ids[:sp.k], -1)
+    return SearchResult(topk_ids, dists[:sp.k],
+                        acc_ids.reshape(-1), acc_hit.reshape(-1), it)
+
+
+@partial(jax.jit, static_argnames=("sp",))
+def search_batch(state: IndexState, queries, key, sp: SearchParams
+                 ) -> SearchResult:
+    """Batched ANNS. queries [B, D]. Entry points are random (paper §4.2:
+    GPU-friendly, no seed maintenance under updates)."""
+    B = queries.shape[0]
+    n = jnp.maximum(state.graph.n, 1)
+    entries = jax.random.randint(key, (B, sp.pool), 0, n, dtype=jnp.int32)
+    res = jax.vmap(lambda q, e: _search_one(state.graph, state.cache, q, e, sp)
+                   )(queries.astype(jnp.float32), entries)
+    return res
+
+
+def brute_force_topk(graph: GraphState, queries, k):
+    """Exact ground truth over alive vectors (recall oracle)."""
+    d = (jnp.sum(queries ** 2, 1, keepdims=True)
+         - 2.0 * queries @ graph.vectors.T
+         + jnp.sum(graph.vectors ** 2, 1)[None, :])
+    d = jnp.where(graph.alive[None, :], d, INF)
+    nd, idx = jax.lax.top_k(-d, k)
+    return idx, -nd
+
+
+def recall_at_k(found_ids, true_ids):
+    """found/true [B, k] -> mean fraction of true ids found."""
+    hits = (found_ids[:, :, None] == true_ids[:, None, :]).any(1)
+    return jnp.mean(hits.astype(jnp.float32))

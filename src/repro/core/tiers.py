@@ -1,0 +1,133 @@
+"""Three-tier store (paper §4.2): device cache / host DRAM / disk.
+
+The disk tier holds vectors + graph rows in the same layout as the host
+tier via ``np.memmap``; a hash-directory tracks residency and cold vectors
+are demoted by ascending F_λ when the host tier saturates. Async prefetch
+uses a background thread (the paper's cascading-lookup pipeline).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Optional
+
+import numpy as np
+
+
+class DiskTier:
+    """Memory-mapped vector + graph store."""
+
+    def __init__(self, path: str, capacity: int, dim: int, degree: int,
+                 create=True):
+        os.makedirs(path, exist_ok=True)
+        mode = "w+" if create else "r+"
+        self.vec = np.memmap(os.path.join(path, "vectors.npy"), np.float32,
+                             mode, shape=(capacity, dim))
+        self.nbr = np.memmap(os.path.join(path, "nbrs.npy"), np.int32,
+                             mode, shape=(capacity, degree))
+        if create:
+            self.nbr[:] = -1
+        self.capacity, self.dim, self.degree = capacity, dim, degree
+
+    def write(self, ids, vectors, nbrs=None):
+        self.vec[ids] = vectors
+        if nbrs is not None:
+            self.nbr[ids] = nbrs
+
+    def read(self, ids):
+        return np.asarray(self.vec[ids]), np.asarray(self.nbr[ids])
+
+    def flush(self):
+        self.vec.flush()
+        self.nbr.flush()
+
+
+class TieredStore:
+    """Host window over a disk-resident dataset.
+
+    Residency directory: ``loc[id] = slot`` into the host window or -1.
+    Demotion policy: lowest-F_λ rows leave the host window first (paper
+    §4.3 last paragraph).
+    """
+
+    def __init__(self, disk: DiskTier, host_slots: int):
+        self.disk = disk
+        self.host_slots = host_slots
+        self.host_vec = np.zeros((host_slots, disk.dim), np.float32)
+        self.host_nbr = np.full((host_slots, disk.degree), -1, np.int32)
+        self.loc = np.full((disk.capacity,), -1, np.int64)      # id -> slot
+        self.slot_id = np.full((host_slots,), -1, np.int64)     # slot -> id
+        self.hits = 0
+        self.misses = 0
+        self._prefetch_q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._th: Optional[threading.Thread] = None
+
+    # -- residency ------------------------------------------------------
+    def fetch(self, ids: np.ndarray, f_lambda: Optional[np.ndarray] = None):
+        """Read rows, promoting misses into the host window (demote lowest
+        F_λ residents when full)."""
+        ids = np.asarray(ids)
+        out_v = np.empty((len(ids), self.disk.dim), np.float32)
+        out_n = np.empty((len(ids), self.disk.degree), np.int32)
+        slots = self.loc[ids]
+        hit = slots >= 0
+        self.hits += int(hit.sum())
+        self.misses += int((~hit).sum())
+        out_v[hit] = self.host_vec[slots[hit]]
+        out_n[hit] = self.host_nbr[slots[hit]]
+        miss_ids = ids[~hit]
+        if miss_ids.size:
+            dv, dn = self.disk.read(miss_ids)
+            out_v[~hit] = dv
+            out_n[~hit] = dn
+            self._promote(miss_ids, dv, dn, f_lambda)
+        return out_v, out_n
+
+    def _promote(self, ids, vecs, nbrs, f_lambda):
+        for i, vid in enumerate(ids):
+            if self.loc[vid] >= 0:
+                continue
+            empty = np.where(self.slot_id < 0)[0]
+            if empty.size:
+                s = empty[0]
+            else:
+                # demote the resident with lowest F_λ
+                if f_lambda is not None:
+                    s = int(np.argmin(f_lambda[self.slot_id]))
+                else:
+                    s = int(np.random.randint(self.host_slots))
+                old = self.slot_id[s]
+                self.disk.write([old], self.host_vec[s:s + 1],
+                                self.host_nbr[s:s + 1])
+                self.loc[old] = -1
+            self.host_vec[s] = vecs[i]
+            self.host_nbr[s] = nbrs[i]
+            self.slot_id[s] = vid
+            self.loc[vid] = s
+
+    # -- async prefetch ---------------------------------------------------
+    def start_prefetcher(self):
+        def work():
+            while not self._stop.is_set():
+                try:
+                    ids = self._prefetch_q.get(timeout=0.05)
+                except queue.Empty:
+                    continue
+                self.fetch(ids)
+        self._th = threading.Thread(target=work, daemon=True)
+        self._th.start()
+
+    def prefetch(self, ids):
+        self._prefetch_q.put(np.asarray(ids))
+
+    def stop(self):
+        self._stop.set()
+        if self._th:
+            self._th.join(timeout=2.0)
+
+    @property
+    def miss_rate(self):
+        tot = self.hits + self.misses
+        return self.misses / tot if tot else 0.0

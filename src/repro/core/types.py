@@ -1,0 +1,108 @@
+"""Functional state pytrees for the SVFusion index.
+
+Two tiers mirror the paper's architecture (DESIGN.md §2):
+
+* ``GraphState`` — the capacity tier (paper: CPU DRAM / disk). Holds every
+  vector, the fixed-out-degree KNN graph, the deletion bitset, in-degrees
+  and per-vertex versions.
+* ``CacheState`` — the bandwidth tier (paper: GPU HBM). Holds M ≪ N hot
+  vectors, the slot↔host-id mapping table, clock reference bits, the decayed
+  recent-access counters and the adaptive promotion threshold θ.
+
+All arrays are fixed-capacity for jit; ``n`` is the high-water mark.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GraphState(NamedTuple):
+    vectors: jax.Array     # [N_max, D] float32
+    nbrs: jax.Array        # [N_max, R] int32, -1 padding
+    alive: jax.Array       # [N_max] bool
+    e_in: jax.Array        # [N_max] int32 in-degree (structural term of F_lambda)
+    version: jax.Array     # [N_max] int32 per-vertex version (cross-tier sync)
+    n: jax.Array           # [] int32 high-water mark
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.nbrs.shape[1]
+
+
+class CacheState(NamedTuple):
+    vectors: jax.Array     # [M, D] float32 cached hot vectors
+    slot_hid: jax.Array    # [M] int32 slot -> host id (-1 empty)
+    h2d: jax.Array         # [N_max] int32 host id -> slot (-1 = not cached)
+    ref: jax.Array         # [M] int8 clock reference bits
+    slot_ver: jax.Array    # [M] int32 cached copy's version
+    f_recent: jax.Array    # [N_max] float32 decayed access count  F_recent(x, t)
+    theta: jax.Array       # [] float32 promotion threshold
+    alpha: jax.Array       # [] float32 weight of F_recent
+    beta: jax.Array        # [] float32 weight of log(1+E_in)
+
+    @property
+    def n_slots(self) -> int:
+        return self.vectors.shape[0]
+
+
+class Stats(NamedTuple):
+    accesses: jax.Array    # [] int64-ish counters (int32 fine for benches)
+    hits: jax.Array
+    misses: jax.Array
+    promotions: jax.Array
+    evictions: jax.Array
+    transfers: jax.Array   # vectors moved host->device
+    cpu_computed: jax.Array  # miss accesses resolved on the capacity tier
+
+
+class IndexState(NamedTuple):
+    graph: GraphState
+    cache: CacheState
+    stats: Stats
+
+
+class SearchParams(NamedTuple):
+    k: int = 10
+    pool: int = 64          # candidate pool size L >= k
+    max_iters: int = 96     # beam-search iteration cap
+    decay: float = 0.9      # F_recent sliding-window decay per batch
+    max_promote: int = 2048 # transfer batch (paper amortizes over 2048)
+    policy: str = "wavp"    # wavp | lru | lfu | lrfu | never | always
+
+
+def init_stats() -> Stats:
+    return Stats(*(jnp.zeros((), jnp.int32) for _ in range(7)))
+
+
+def init_cache_state(n_max: int, n_slots: int, dim: int,
+                     theta: float = 1.0, alpha: float = 1.0,
+                     beta: float = 1.0) -> CacheState:
+    return CacheState(
+        vectors=jnp.zeros((n_slots, dim), jnp.float32),
+        slot_hid=jnp.full((n_slots,), -1, jnp.int32),
+        h2d=jnp.full((n_max,), -1, jnp.int32),
+        ref=jnp.zeros((n_slots,), jnp.int8),
+        slot_ver=jnp.zeros((n_slots,), jnp.int32),
+        f_recent=jnp.zeros((n_max,), jnp.float32),
+        theta=jnp.asarray(theta, jnp.float32),
+        alpha=jnp.asarray(alpha, jnp.float32),
+        beta=jnp.asarray(beta, jnp.float32),
+    )
+
+
+def init_graph_state(n_max: int, dim: int, degree: int) -> GraphState:
+    return GraphState(
+        vectors=jnp.zeros((n_max, dim), jnp.float32),
+        nbrs=jnp.full((n_max, degree), -1, jnp.int32),
+        alive=jnp.zeros((n_max,), bool),
+        e_in=jnp.zeros((n_max,), jnp.int32),
+        version=jnp.zeros((n_max,), jnp.int32),
+        n=jnp.zeros((), jnp.int32),
+    )

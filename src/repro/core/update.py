@@ -1,0 +1,214 @@
+"""Index updates (paper §5): batched insertion with rank-based candidate
+reordering + reverse edges; three-stage deletion (logical bitset →
+localized topology-aware repair → global consolidation).
+
+All functions are functional: state in, state out. ``insert_batch`` also
+returns the reverse-edge triplet log (v, v_new, d) consumed by the MVCC
+merge protocol (paper §5.3) when a consolidation snapshot is in flight.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.build import compute_e_in, rank_based_reorder
+from repro.core.search import _search_one
+from repro.core.types import GraphState, IndexState, SearchParams
+
+INF = jnp.float32(jnp.inf)
+
+
+class RevLog(NamedTuple):
+    """Reverse-edge triplets (paper §5.3 'Reverse Edge Integration')."""
+    v: jax.Array       # [E] existing vertex receiving the edge
+    v_new: jax.Array   # [E] newly inserted vertex
+    d: jax.Array       # [E] precomputed distance
+
+
+def _reverse_edge_scatter(graph: GraphState, targets, new_ids, dists):
+    """Vectorized reverse-edge insertion. For each edge (targets[e] ->
+    new_ids[e]): use a free slot if any, else replace the current worst
+    (farthest) neighbor if the new edge is closer. Write conflicts resolve
+    last-writer-wins (the paper uses best-effort atomics + thread-local
+    buffers; KNNG is approximate by construction)."""
+    R = graph.degree
+    t = jnp.clip(targets, 0)
+    rows = graph.nbrs[t]                                   # [E, R]
+    tvec = graph.vectors[t]
+    nb_d = jnp.sum((graph.vectors[jnp.clip(rows, 0)]
+                    - tvec[:, None, :]) ** 2, axis=-1)
+    nb_d = jnp.where(rows >= 0, nb_d, -INF)                # free slots win
+    worst = jnp.argmax(jnp.where(rows < 0, INF, nb_d), axis=1)
+    has_free = (rows < 0).any(axis=1)
+    free_idx = jnp.argmax(rows < 0, axis=1)
+    slot = jnp.where(has_free, free_idx, worst)
+    improves = has_free | (dists < jnp.max(nb_d, axis=1))
+    ok = (targets >= 0) & improves
+    row_idx = jnp.where(ok, t, graph.capacity)             # no-op row
+    nbrs_pad = jnp.concatenate(
+        [graph.nbrs, jnp.full((1, R), -1, jnp.int32)], axis=0)
+    nbrs_pad = nbrs_pad.at[row_idx, slot].set(
+        jnp.where(ok, new_ids, -1))
+    return nbrs_pad[:graph.capacity]
+
+
+@partial(jax.jit, static_argnames=("sp",))
+def insert_batch(state: IndexState, new_vecs, key, sp: SearchParams):
+    """Insert a batch. Returns (state, new_ids, RevLog)."""
+    graph, cache, stats = state
+    Bi, D = new_vecs.shape
+    new_vecs = new_vecs.astype(jnp.float32)
+    ids = graph.n + jnp.arange(Bi, dtype=jnp.int32)
+
+    # phase 1 (paper §5.1): GPU-side candidate search on the current graph
+    n = jnp.maximum(graph.n, 1)
+    entries = jax.random.randint(key, (Bi, sp.pool), 0, n, dtype=jnp.int32)
+    res = jax.vmap(lambda q, e: _search_one(graph, cache, q, e,
+                                            sp._replace(k=sp.pool)))(
+        new_vecs, entries)
+    cand_ids, cand_d = res.ids, res.dists                  # [Bi, L] sorted
+
+    # phase 2: heuristic (rank-based) reordering then edge establishment
+    sel = rank_based_reorder(cand_ids, cand_d, graph.nbrs, graph.degree)
+
+    vectors = graph.vectors.at[ids].set(new_vecs)
+    nbrs = graph.nbrs.at[ids].set(sel)
+    alive = graph.alive.at[ids].set(True)
+    version = graph.version.at[ids].set(1)
+    graph = graph._replace(vectors=vectors, nbrs=nbrs, alive=alive,
+                           version=version, n=graph.n + Bi)
+
+    # reverse edges (flattened over the batch)
+    flat_t = sel.reshape(-1)
+    flat_new = jnp.repeat(ids, graph.degree)
+    d_rev = jnp.sum((graph.vectors[jnp.clip(flat_t, 0)]
+                     - graph.vectors[flat_new]) ** 2, axis=-1)
+    d_rev = jnp.where(flat_t >= 0, d_rev, INF)
+    nbrs = _reverse_edge_scatter(graph, flat_t, flat_new, d_rev)
+    version = graph.version.at[jnp.clip(flat_t, 0)].add(
+        (flat_t >= 0).astype(jnp.int32))
+    graph = graph._replace(nbrs=nbrs, version=version)
+    graph = graph._replace(e_in=compute_e_in(graph.nbrs, graph.capacity))
+    return (IndexState(graph, cache, stats), ids,
+            RevLog(flat_t, flat_new, d_rev))
+
+
+@jax.jit
+def delete_batch(state: IndexState, ids):
+    """Stage 1 (paper §5.2.1): logical deletion. The bitset is shared by all
+    tiers (immediate cross-tier sync); searches/insertions skip marked rows
+    transparently."""
+    graph, cache, stats = state
+    cid = jnp.clip(ids, 0)
+    ok = (ids >= 0) & graph.alive[cid]
+    alive = graph.alive.at[cid].set(jnp.where(ok, False, graph.alive[cid]))
+    version = graph.version.at[cid].add(ok.astype(jnp.int32))
+    return IndexState(graph._replace(alive=alive, version=version),
+                      cache, stats)
+
+
+def deleted_fraction(graph: GraphState) -> jax.Array:
+    within = jnp.arange(graph.capacity) < graph.n
+    dead = within & ~graph.alive
+    return dead.sum() / jnp.maximum(graph.n, 1)
+
+
+def affected_fraction(graph: GraphState):
+    """Per-vertex fraction of deleted out-neighbors."""
+    nb = graph.nbrs
+    valid = nb >= 0
+    dead = valid & ~graph.alive[jnp.clip(nb, 0)]
+    return dead.sum(1) / jnp.maximum(valid.sum(1), 1)
+
+
+@partial(jax.jit, static_argnames=("max_repair", "c"))
+def repair_affected(state: IndexState, *, max_repair=256, c=2,
+                    threshold=0.5):
+    """Stage 2 (paper §5.2.2): localized topology-aware repair. For the most
+    affected alive vertices (deleted-neighbor fraction > 50%), each deleted
+    neighbor p contributes at most ``c`` of its own alive out-neighbors
+    (nearest to v) as replacement edges — O(c) per deletion instead of the
+    full consolidation O(|N_out(p)|)."""
+    graph, cache, stats = state
+    frac = affected_fraction(graph)
+    score = jnp.where(graph.alive & (frac > threshold), frac, -1.0)
+    _, vsel = jax.lax.top_k(score, max_repair)
+    do = score[vsel] > 0
+
+    R = graph.degree
+
+    def repair_one(v, active):
+        row = graph.nbrs[v]
+        valid = row >= 0
+        dead = valid & ~graph.alive[jnp.clip(row, 0)]
+        hop2 = graph.nbrs[jnp.clip(row, 0)]                # [R, R]
+        vvec = graph.vectors[v]
+        d2 = jnp.sum((graph.vectors[jnp.clip(hop2, 0)]
+                      - vvec[None, None, :]) ** 2, axis=-1)
+        ok2 = (hop2 >= 0) & graph.alive[jnp.clip(hop2, 0)] & (hop2 != v) \
+            & dead[:, None]                                # only via deleted p
+        # not already a live neighbor
+        dup = (hop2[:, :, None] == jnp.where(dead, -1, row)[None, None, :]
+               ).any(-1)
+        d2 = jnp.where(ok2 & ~dup, d2, INF)
+        # at most c per deleted neighbor
+        dtop, itop = jax.lax.top_k(-d2, c)                 # [R, c]
+        cand = jnp.take_along_axis(hop2, itop, axis=1).reshape(-1)
+        cd = (-dtop).reshape(-1)
+        # dedup candidates
+        dupc = jnp.triu(cand[:, None] == cand[None, :], k=1).any(0)
+        cd = jnp.where(jnp.isfinite(cd) & ~dupc, cd, INF)
+        order = jnp.argsort(cd)
+        cand, cd = cand[order], cd[order]
+        n_dead = dead.sum()
+        # fill dead slots with best candidates
+        slot_rank = jnp.cumsum(dead) - 1                   # rank per dead slot
+        fill = jnp.where(jnp.isfinite(cd[jnp.clip(slot_rank, 0, cand.shape[0] - 1)]),
+                         cand[jnp.clip(slot_rank, 0, cand.shape[0] - 1)], -1)
+        new_row = jnp.where(dead, fill, row)
+        return jnp.where(active, new_row, row)
+
+    new_rows = jax.vmap(repair_one)(jnp.clip(vsel, 0), do)
+    nbrs = graph.nbrs.at[jnp.clip(vsel, 0)].set(new_rows)
+    version = graph.version.at[jnp.clip(vsel, 0)].add(do.astype(jnp.int32))
+    graph = graph._replace(nbrs=nbrs, version=version)
+    graph = graph._replace(e_in=compute_e_in(graph.nbrs, graph.capacity))
+    return IndexState(graph, cache, stats), do.sum()
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def consolidate(state: IndexState, *, chunk=512):
+    """Stage 3 (paper §5.2.2): global consolidation. For every alive vertex,
+    rebuild its neighbor list from {alive out-neighbors} ∪ {alive
+    out-neighbors of its deleted out-neighbors}, pruned to degree by
+    distance. Dead rows are cleared. Runs on a snapshot in the engine
+    (MVCC) so foreground ops never block on it."""
+    graph, cache, stats = state
+    R = graph.degree
+    N = graph.capacity
+
+    def rebuild(v):
+        row = graph.nbrs[v]
+        valid = row >= 0
+        dead = valid & ~graph.alive[jnp.clip(row, 0)]
+        hop2 = graph.nbrs[jnp.clip(row, 0)]                # [R, R]
+        hop2 = jnp.where(dead[:, None], hop2, -1)          # only via deleted
+        cand = jnp.concatenate([jnp.where(dead, -1, row), hop2.reshape(-1)])
+        okc = (cand >= 0) & graph.alive[jnp.clip(cand, 0)] & (cand != v)
+        vvec = graph.vectors[v]
+        d = jnp.sum((graph.vectors[jnp.clip(cand, 0)] - vvec) ** 2, axis=-1)
+        dup = jnp.triu(cand[:, None] == cand[None, :], k=1).any(0)
+        d = jnp.where(okc & ~dup, d, INF)
+        nd, it = jax.lax.top_k(-d, R)
+        new_row = jnp.where(jnp.isfinite(-nd), cand[it], -1)
+        return jnp.where(graph.alive[v], new_row, jnp.full((R,), -1, jnp.int32))
+
+    ids = jnp.arange(N, dtype=jnp.int32).reshape(-1, chunk)
+    nbrs = jax.lax.map(jax.vmap(rebuild), ids).reshape(N, R)
+    graph = graph._replace(nbrs=nbrs,
+                           version=graph.version + 1)
+    graph = graph._replace(e_in=compute_e_in(graph.nbrs, N))
+    return IndexState(graph, cache, stats)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the l2_gather kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def l2_gather_ref(table, ids, queries):
+    """table [N,D]; ids [B,K]; queries [B,D] -> squared L2 dists [B,K]."""
+    x = table[ids]                                   # [B, K, D]
+    d = x - queries[:, None, :].astype(table.dtype)
+    return jnp.sum(d.astype(jnp.float32) ** 2, axis=-1)

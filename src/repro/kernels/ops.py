@@ -1,0 +1,31 @@
+"""Jit'd public wrappers over the Pallas kernels with jnp fallbacks.
+
+On this CPU container the kernels execute in interpret mode (slow but
+bit-faithful to the kernel body); production TPU builds flip
+``use_pallas=True, interpret=False``. The search core calls these entry
+points so the kernel path is exercised end-to-end in tests.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.l2_gather.kernel import l2_gather
+from repro.kernels.l2_gather.ref import l2_gather_ref
+from repro.kernels.topk_merge.kernel import topk_merge
+from repro.kernels.topk_merge.ref import topk_merge_ref
+
+
+def gather_l2(table, ids, queries, *, use_pallas=False, interpret=True):
+    """Squared-L2 distances from gathered table rows. [B,K] fp32."""
+    if use_pallas:
+        return l2_gather(table, ids, queries, interpret=interpret)
+    return l2_gather_ref(table, ids, queries)
+
+
+def pool_merge(pool_d, pool_i, pool_v, new_d, new_i, *, use_pallas=False,
+               interpret=True):
+    """Merge candidate pool with new distances, keep best-L."""
+    if use_pallas:
+        return topk_merge(pool_d, pool_i, pool_v, new_d, new_i,
+                          interpret=interpret)
+    return topk_merge_ref(pool_d, pool_i, pool_v, new_d, new_i)

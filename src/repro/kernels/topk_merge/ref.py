@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the topk_merge kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def topk_merge_ref(pool_d, pool_i, pool_v, new_d, new_i):
+    d = jnp.concatenate([pool_d, new_d], axis=1).astype(jnp.float32)
+    i = jnp.concatenate([pool_i, new_i], axis=1).astype(jnp.int32)
+    v = jnp.concatenate([pool_v, jnp.zeros_like(new_i, bool)], axis=1)
+    L = pool_d.shape[1]
+    # sort by (distance, id) — deterministic total order matching the kernel
+    order = jnp.lexsort((i, d), axis=1)
+    d2 = jnp.take_along_axis(d, order, axis=1)[:, :L]
+    i2 = jnp.take_along_axis(i, order, axis=1)[:, :L]
+    v2 = jnp.take_along_axis(v, order, axis=1)[:, :L]
+    return d2, i2, v2

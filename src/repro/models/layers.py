@@ -1,0 +1,333 @@
+"""Core model building blocks: templates, norms, RoPE, attention, SwiGLU.
+
+Pure-JAX (no flax). Parameters are nested dicts of arrays. Every family
+module builds a *template* — a nested dict of ``TSpec(shape, axes, scale)`` —
+from which both the init'd params and the PartitionSpec tree are derived
+(single source of truth for shapes and shardings).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import ax, constrain, weight_gather
+
+
+class TSpec(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis names (None = replicated)
+    scale: float = 0.02    # normal init stddev; 0 -> zeros; -1 -> ones
+
+
+def init_from_template(key, template, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(template, is_leaf=lambda x: isinstance(x, TSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, t in zip(keys, leaves):
+        if t.scale == 0.0:
+            out.append(jnp.zeros(t.shape, dtype))
+        elif t.scale == -1.0:
+            out.append(jnp.ones(t.shape, dtype))
+        else:
+            out.append((jax.random.normal(k, t.shape) * t.scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def specs_from_template(template):
+    return jax.tree.map(lambda t: ax(*t.axes), template,
+                        is_leaf=lambda x: isinstance(x, TSpec))
+
+
+def abstract_from_template(template, dtype=jnp.float32):
+    return jax.tree.map(lambda t: jax.ShapeDtypeStruct(t.shape, dtype), template,
+                        is_leaf=lambda x: isinstance(x, TSpec))
+
+
+def res_constrain(cfg, x):
+    """Residual-stream sharding constraint (ModelConfig.residual_shard)."""
+    if cfg.residual_shard == "seq":
+        return constrain(x, "batch", "tensor", None)
+    if cfg.residual_shard == "dmodel":
+        return constrain(x, "batch", None, "tensor")
+    return constrain(x, "batch", None, None)
+
+
+def sp_gather(cfg, h):
+    """Block-boundary gather: collect the seq- or dmodel-sharded activation
+    ONCE so the q/k/v (or in_proj/gate/up) projections share a single
+    all-gather instead of re-gathering (or partial-sum all-reducing) per
+    matmul (§Perf: 3x fewer activation collectives)."""
+    if cfg.residual_shard in ("seq", "dmodel"):
+        return constrain(h, "batch", None, None)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-5):
+    # fp32-ACCUMULATING einsum over bf16 operands: variance is exact-enough
+    # without ever materializing a full fp32 copy of the residual stream.
+    # (A plain x.astype(f32) here makes XLA sink the convert into the remat
+    # saved-activation stack, doubling its bytes — EXPERIMENTS.md §Perf.)
+    sq = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = (sq / x.shape[-1])[..., None]
+    inv = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * inv * weight.astype(x.dtype)
+
+
+def rope_freqs(positions, head_dim, theta):
+    """positions [...], returns (cos, sin) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B,S,H,D]; cos/sin [B,S,half] or [S,half]."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:       # [S, half] -> [1, S, 1, half]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    elif cos.ndim == 3:     # [B, S, half] -> [B, S, 1, half]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(qpos, kpos, *, causal, window, kv_len=None):
+    """Additive mask bias [*, S, T] from absolute positions."""
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    cond = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        cond = cond & (k <= q)
+    if window:
+        cond = cond & (k > q - window)
+    if kv_len is not None:
+        cond = cond & (k < kv_len)
+    return jnp.where(cond, 0.0, -1e30).astype(jnp.float32)
+
+
+def _attn_core(q, k, v, bias):
+    """q [B,S,H,D]; k,v [B,T,H,D]; bias broadcastable to [B,1,S,T] (fp32)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def attention(q, k, v, *, causal=True, q_offset=0, window=0, kv_len=None,
+              chunk=0):
+    """Multi-head attention with GQA repeat, optional sliding window and
+    query chunking (memory control for long prefill).
+
+    q [B,S,Hq,D]; k,v [B,T,Hkv,D]. q_offset: absolute position of q[0]
+    (scalar or [B]). kv_len: valid KV length (scalar or [B]) for decode.
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    k = repeat_kv(k, Hq // Hkv)
+    v = repeat_kv(v, Hq // Hkv)
+    q_offset = jnp.asarray(q_offset)
+    kv_len_arr = None if kv_len is None else jnp.asarray(kv_len)
+
+    def block(qc, off):
+        Sc = qc.shape[1]
+        qpos = off[..., None] + jnp.arange(Sc) if off.ndim else off + jnp.arange(Sc)
+        kpos = jnp.arange(T)
+        if qpos.ndim == 1:
+            bias = _mask_bias(qpos, kpos, causal=causal, window=window,
+                              kv_len=kv_len_arr if (kv_len_arr is None or kv_len_arr.ndim == 0) else None)
+            bias = bias[None, None]
+        else:  # per-batch offsets
+            bias = jax.vmap(lambda qp: _mask_bias(qp, kpos, causal=causal,
+                                                  window=window))(qpos)[:, None]
+        if kv_len_arr is not None and kv_len_arr.ndim == 1:
+            bias = bias + jnp.where(kpos[None, None, None, :]
+                                    < kv_len_arr[:, None, None, None], 0.0, -1e30)
+        return _attn_core(qc, k, v, bias)
+
+    if chunk and S > chunk and S % chunk == 0:
+        n = S // chunk
+        qs = q.reshape(B, n, chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+
+        def body(_, args):
+            i, qc = args
+            return _, block(qc, q_offset + i * chunk)
+
+        _, out = jax.lax.scan(body, None, (jnp.arange(n), qs))
+        return out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, D)
+    return block(q, q_offset)
+
+
+def cross_attention(q, k, v):
+    """Bidirectional cross-attention (whisper decoder -> encoder memory)."""
+    return attention(q, k, v, causal=False)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window=0):
+    """Single-token decode attention. q [B,1,Hq,D]; caches [B,T,Hkv,D].
+
+    The KV cache sequence dim may be sharded (logical ``kv_seq``); the
+    softmax/O-contraction over the sharded T lowers to partial reductions +
+    all-reduce (flash-decoding-style combine) rather than a KV all-gather —
+    verified in the dry-run HLO.
+    """
+    return attention(q, k_cache, v_cache, causal=False, window=window,
+                     q_offset=jnp.asarray(kv_len) - 1 if window else 0,
+                     kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + RoPE + attention)
+# ---------------------------------------------------------------------------
+
+def attn_template(cfg, stacked: Optional[int] = None):
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L = (stacked,) if stacked else ()
+    LN = (None,) if stacked else ()
+    s = 0.02
+    t = {
+        "wq": TSpec(L + (D, Hq * Dh), LN + ("fsdp", "tensor"), s),
+        "wk": TSpec(L + (D, Hkv * Dh), LN + ("fsdp", "tensor"), s),
+        "wv": TSpec(L + (D, Hkv * Dh), LN + ("fsdp", "tensor"), s),
+        "wo": TSpec(L + (Hq * Dh, D), LN + ("tensor", "fsdp"), s / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = TSpec(L + (Dh,), LN + (None,), -1.0)
+        t["k_norm"] = TSpec(L + (Dh,), LN + (None,), -1.0)
+    return t
+
+
+def attn_qkv(p, x, cfg, positions):
+    """Project + RoPE. Returns q [B,S,Hq,D], k,v [B,S,Hkv,D]."""
+    B, S, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    wq = weight_gather(cfg, p["wq"].astype(dt), ("fsdp", "tensor"))
+    wk = weight_gather(cfg, p["wk"].astype(dt), ("fsdp", "tensor"))
+    wv = weight_gather(cfg, p["wv"].astype(dt), ("fsdp", "tensor"))
+    q = (x @ wq).reshape(B, S, Hq, Dh)
+    k = (x @ wk).reshape(B, S, Hkv, Dh)
+    v = (x @ wv).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(positions, Dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "tensor", None)
+    return q, k, v
+
+
+def attn_out(p, o, cfg):
+    B, S = o.shape[:2]
+    wo = weight_gather(cfg, p["wo"].astype(o.dtype), ("tensor", "fsdp"))
+    y = o.reshape(B, S, cfg.n_heads * cfg.head_dim) @ wo
+    return res_constrain(cfg, y)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_template(cfg, stacked: Optional[int] = None, d_ff=None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    L = (stacked,) if stacked else ()
+    LN = (None,) if stacked else ()
+    return {
+        "w_gate": TSpec(L + (D, F), LN + ("fsdp", "tensor"), 0.02),
+        "w_up": TSpec(L + (D, F), LN + ("fsdp", "tensor"), 0.02),
+        "w_down": TSpec(L + (F, D), LN + ("tensor", "fsdp"),
+                        0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlp_apply(p, x, cfg=None):
+    dt = x.dtype
+    if cfg is not None:
+        wg = weight_gather(cfg, p["w_gate"].astype(dt), ("fsdp", "tensor"))
+        wu = weight_gather(cfg, p["w_up"].astype(dt), ("fsdp", "tensor"))
+        wd = weight_gather(cfg, p["w_down"].astype(dt), ("tensor", "fsdp"))
+    else:
+        wg, wu, wd = (p[k].astype(dt) for k in ("w_gate", "w_up", "w_down"))
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    h = constrain(h, "batch", None, "tensor")
+    y = h @ wd
+    return res_constrain(cfg, y) if cfg is not None else constrain(
+        y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_template(cfg):
+    V, D = cfg.padded_vocab, cfg.d_model
+    t = {
+        "embed": TSpec((V, D), ("tensor", "fsdp"), 0.02),
+        "final_norm": TSpec((D,), (None,), -1.0),
+    }
+    if not cfg.tie_embeddings:
+        t["head"] = TSpec((D, V), ("fsdp", "tensor"), 0.02)
+    return t
+
+
+def embed_tokens(p, tokens, cfg, dtype):
+    emb = jnp.take(p["embed"].astype(dtype), tokens, axis=0)
+    return constrain(emb, "batch", None, None)
+
+
+def lm_logits(p, x, cfg):
+    w = p["head"] if not cfg.tie_embeddings else p["embed"].T
+    logits = x @ w.astype(x.dtype)
+    return constrain(logits, "batch", None, "tensor")
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits [B,S,V] (V may be sharded), labels [B,S]. Mean over tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    loss = lse - picked
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()
+
+
+# ---------------------------------------------------------------------------
+# Remat
+# ---------------------------------------------------------------------------
+
+def maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)

@@ -1,0 +1,146 @@
+"""Mamba-1 selective SSM (chunked associative scan + single-token step).
+
+Train path: sequence is split into chunks of ``cfg.ssm_chunk``; an outer
+``lax.scan`` carries the SSM state across chunks while each chunk runs a
+log-depth ``associative_scan`` — bounding the materialized element tensor to
+[B, chunk, d_inner, d_state] (VMEM/HBM-friendly) instead of the full
+sequence. Decode path: O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import TSpec
+from repro.models.layers import res_constrain
+from repro.models.sharding import constrain, weight_gather
+
+
+def ssm_template(cfg, stacked=None, d_model=None):
+    D = d_model or cfg.d_model
+    Din = cfg.expand * D
+    R = cfg.dt_rank or -(-D // 16)
+    N, K = cfg.d_state, cfg.d_conv
+    L = (stacked,) if stacked else ()
+    LN = (None,) if stacked else ()
+    return {
+        "in_proj": TSpec(L + (D, 2 * Din), LN + ("fsdp", "tensor"), 0.02),
+        "conv_w": TSpec(L + (K, Din), LN + (None, "tensor"), 0.02),
+        "conv_b": TSpec(L + (Din,), LN + ("tensor",), 0.0),
+        "x_proj": TSpec(L + (Din, R + 2 * N), LN + ("tensor", None), 0.02),
+        "dt_proj": TSpec(L + (R, Din), LN + (None, "tensor"), 0.02),
+        "dt_bias": TSpec(L + (Din,), LN + ("tensor",), 0.0),
+        "A_log": TSpec(L + (Din, N), LN + ("tensor", None), 0.02),
+        "D": TSpec(L + (Din,), LN + ("tensor",), -1.0),
+        "out_proj": TSpec(L + (Din, D), LN + ("tensor", "fsdp"),
+                          0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv. x [B,S,Din], w [K,Din]. init_state [B,K-1,Din]."""
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else init_state
+    return out + b.astype(x.dtype), new_state
+
+
+def _ssm_coeffs(p, xc, cfg):
+    """xc [B,S,Din] post-conv. Returns (a, bx, Cc, D) with
+    a [B,S,Din,N] decay, bx [B,S,Din,N] input, Cc [B,S,N]."""
+    R = p["dt_proj"].shape[0]
+    N = cfg.d_state
+    proj = xc @ p["x_proj"].astype(xc.dtype)          # [B,S,R+2N]
+    dt, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,Din]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))      # [Din,N]
+    a = jnp.exp(dt[..., None] * A)                    # [B,S,Din,N]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[..., None, :]
+    return a, bx, Cc.astype(jnp.float32)
+
+
+def _chunk_scan(a, bx, h0):
+    """Within-chunk scan. a,bx [B,C,Din,N]; h0 [B,Din,N] -> (ys_state, h_end)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    ca, cb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    hs = ca * h0[:, None] + cb                        # [B,C,Din,N]
+    return hs, hs[:, -1]
+
+
+def mamba_mixer(p, x, cfg, state=None):
+    """Full-sequence mixer. x [B,S,D]. Returns (y [B,S,D], (h, conv_state))."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    Din = p["in_proj"].shape[-1] // 2
+    N = cfg.d_state
+    w_in = weight_gather(cfg, p["in_proj"].astype(dt), ("fsdp", "tensor"))
+    xz = x @ w_in
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xr = constrain(xr, "batch", None, "tensor")
+    if state is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+        conv0 = None
+    else:
+        h0, conv0 = state
+    xc, conv_state = _causal_conv(xr, p["conv_w"], p["conv_b"], conv0)
+    xc = jax.nn.silu(xc)
+
+    chunk = min(cfg.ssm_chunk, S) or S
+    if S % chunk != 0:
+        chunk = S
+    nC = S // chunk
+
+    def chunk_body(h, xc_c):
+        a, bx, Cc = _ssm_coeffs(p, xc_c, cfg)
+        hs, h_end = _chunk_scan(a, bx, h)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Cc)       # fp32
+        return h_end, y
+
+    if nC > 1:
+        xcs = xc.reshape(B, nC, chunk, Din).transpose(1, 0, 2, 3)
+        h_end, ys = jax.lax.scan(chunk_body, h0, xcs)
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, Din)
+    else:
+        h_end, y = chunk_body(h0, xc)
+
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(dt)) * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "tensor")
+    w_out = weight_gather(cfg, p["out_proj"].astype(dt), ("tensor", "fsdp"))
+    out = y @ w_out
+    return res_constrain(cfg, out), (h_end, conv_state)
+
+
+def mamba_step(p, x, cfg, state):
+    """Single-token decode. x [B,1,D]; state (h [B,Din,N], conv [B,K-1,Din])."""
+    dt = x.dtype
+    B = x.shape[0]
+    h, conv0 = state
+    xz = x @ p["in_proj"].astype(dt)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xr, p["conv_w"], p["conv_b"], conv0)
+    xc = jax.nn.silu(xc)                              # [B,1,Din]
+    a, bx, Cc = _ssm_coeffs(p, xc, cfg)
+    h = a[:, 0] * h + bx[:, 0]                        # [B,Din,N]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    return out, (h, conv_state)
+
+
+def init_mamba_state(cfg, batch, d_model=None, dtype=jnp.bfloat16):
+    Din = cfg.expand * (d_model or cfg.d_model)
+    h = jnp.zeros((batch, Din, cfg.d_state), jnp.float32)
+    conv = jnp.zeros((batch, cfg.d_conv - 1, Din), dtype)
+    return h, conv

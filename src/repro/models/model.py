@@ -1,0 +1,659 @@
+"""Model assembly for all assigned architecture families.
+
+Families: dense | moe | ssm | hybrid | encdec | vlm.
+
+* Layer stacks are ``lax.scan``-ed over stacked parameters (compact HLO,
+  fast 512-device compiles); hybrid models unroll their 3 global-attention
+  layers and scan the sliding-window spans.
+* ``prefill`` returns a KV/SSM cache; ``decode_step`` consumes + updates it.
+* ``cost_units`` exposes per-layer bodies + trip multipliers so the roofline
+  extractor can correct for scan bodies being counted once by
+  ``cost_analysis`` (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as Lyr
+from repro.models import mamba as M
+from repro.models import moe as Moe
+from repro.models.layers import (TSpec, attention, attn_out, attn_qkv,
+                                 attn_template, decode_attention,
+                                 embed_template, embed_tokens, lm_logits,
+                                 maybe_remat, mlp_apply, mlp_template,
+                                 rms_norm, softmax_xent)
+from repro.models.sharding import ax, constrain
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _norm_t(cfg, stacked=None):
+    L = (stacked,) if stacked else ()
+    LN = (None,) if stacked else ()
+    return TSpec(L + (cfg.d_model,), LN + (None,), -1.0)
+
+
+def _dense_layer_template(cfg, n, with_moe=False):
+    t = {
+        "attn": attn_template(cfg, stacked=n),
+        "ln1": _norm_t(cfg, n),
+        "ln2": _norm_t(cfg, n),
+    }
+    t["mlp"] = Moe.moe_template(cfg, stacked=n) if with_moe \
+        else mlp_template(cfg, stacked=n)
+    return t
+
+
+def _hybrid_layer_template(cfg, n):
+    return {
+        "attn": attn_template(cfg, stacked=n),
+        "ssm": M.ssm_template(cfg, stacked=n),
+        "ln1": _norm_t(cfg, n),
+        "ln2": _norm_t(cfg, n),
+        "ln_attn": _norm_t(cfg, n),
+        "ln_ssm": _norm_t(cfg, n),
+        "mlp": mlp_template(cfg, stacked=n),
+    }
+
+
+def _encdec_layer_templates(cfg):
+    enc = {
+        "attn": attn_template(cfg, stacked=cfg.n_enc_layers),
+        "ln1": _norm_t(cfg, cfg.n_enc_layers),
+        "ln2": _norm_t(cfg, cfg.n_enc_layers),
+        "mlp": mlp_template(cfg, stacked=cfg.n_enc_layers),
+    }
+    dec = {
+        "attn": attn_template(cfg, stacked=cfg.n_dec_layers),
+        "xattn": attn_template(cfg, stacked=cfg.n_dec_layers),
+        "ln1": _norm_t(cfg, cfg.n_dec_layers),
+        "lnx": _norm_t(cfg, cfg.n_dec_layers),
+        "ln2": _norm_t(cfg, cfg.n_dec_layers),
+        "mlp": mlp_template(cfg, stacked=cfg.n_dec_layers),
+    }
+    return enc, dec
+
+
+def hybrid_split(cfg):
+    """(global_layer_ids, swa span sizes). Globals: first / middle / last."""
+    L = cfg.n_layers
+    g = sorted({0, L // 2, L - 1})
+    spans = []
+    prev = -1
+    for gi in g + [L]:
+        spans.append(gi - prev - 1)
+        prev = gi
+    return g, spans  # len(spans) == len(g)+1 (span before each global + tail)
+
+
+def build_templates(cfg: ModelConfig):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"tok": embed_template(cfg),
+                "layers": _dense_layer_template(cfg, cfg.n_layers)}
+    if fam == "moe":
+        return {"tok": embed_template(cfg),
+                "layers": _dense_layer_template(cfg, cfg.n_layers, with_moe=True)}
+    if fam == "ssm":
+        return {"tok": embed_template(cfg),
+                "layers": {"ssm": M.ssm_template(cfg, stacked=cfg.n_layers),
+                           "ln1": _norm_t(cfg, cfg.n_layers)}}
+    if fam == "hybrid":
+        g, _ = hybrid_split(cfg)
+        return {"tok": embed_template(cfg),
+                "global": _hybrid_layer_template(cfg, len(g)),
+                "swa": _hybrid_layer_template(cfg, cfg.n_layers - len(g))}
+    if fam == "encdec":
+        enc, dec = _encdec_layer_templates(cfg)
+        return {"tok": embed_template(cfg), "enc": enc, "dec": dec,
+                "enc_final_norm": _norm_t(cfg)}
+    raise ValueError(fam)
+
+
+def init_params(cfg, key, dtype=None):
+    tpl = build_templates(cfg)
+    return Lyr.init_from_template(key, tpl, jnp.dtype(dtype or cfg.param_dtype))
+
+
+def param_specs(cfg):
+    return Lyr.specs_from_template(build_templates(cfg))
+
+
+def abstract_params(cfg, dtype=None):
+    return Lyr.abstract_from_template(build_templates(cfg),
+                                      jnp.dtype(dtype or cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (full-sequence forward; optionally emit KV/state for prefill)
+# ---------------------------------------------------------------------------
+
+def dense_layer_fwd(cfg, p, x, positions, *, window=0, collect=False):
+    x = Lyr.res_constrain(cfg, x)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln1"], cfg.norm_eps))
+    q, k, v = attn_qkv(p["attn"], h, cfg, positions)
+    o = attention(q, k, v, causal=True, window=window, chunk=cfg.attn_chunk)
+    x = x + attn_out(p["attn"], o, cfg)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln2"], cfg.norm_eps))
+    if cfg.family == "moe" or ("router" in p["mlp"]):
+        x = x + Moe.moe_apply(p["mlp"], h, cfg)
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg)
+    if collect:   # keep stacked prefill KV sharded like the decode cache
+        k = constrain(k, "batch", "kv_seq", None, None)
+        v = constrain(v, "batch", "kv_seq", None, None)
+        return x, (k, v)
+    return x, None
+
+
+def ssm_layer_fwd(cfg, p, x, *, collect=False):
+    x = Lyr.res_constrain(cfg, x)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln1"], cfg.norm_eps))
+    y, state = M.mamba_mixer(p["ssm"], h, cfg)
+    x = x + y
+    return (x, state) if collect else (x, None)
+
+
+def hybrid_layer_fwd(cfg, p, x, positions, *, window, collect=False):
+    x = Lyr.res_constrain(cfg, x)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln1"], cfg.norm_eps))
+    q, k, v = attn_qkv(p["attn"], h, cfg, positions)
+    o = attention(q, k, v, causal=True, window=window, chunk=cfg.attn_chunk)
+    ao = attn_out(p["attn"], o, cfg)
+    so, state = M.mamba_mixer(p["ssm"], h, cfg)
+    fused = 0.5 * (rms_norm(ao, p["ln_attn"], cfg.norm_eps)
+                   + rms_norm(so, p["ln_ssm"], cfg.norm_eps))
+    x = x + fused
+    h2 = Lyr.sp_gather(cfg, rms_norm(x, p["ln2"], cfg.norm_eps))
+    x = x + mlp_apply(p["mlp"], h2, cfg)
+    if collect:
+        k = constrain(k, "batch", "kv_seq", None, None)
+        v = constrain(v, "batch", "kv_seq", None, None)
+        return x, ((k, v), state)
+    return x, None
+
+
+def enc_layer_fwd(cfg, p, x, positions):
+    x = Lyr.res_constrain(cfg, x)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln1"], cfg.norm_eps))
+    q, k, v = attn_qkv(p["attn"], h, cfg, positions)
+    o = attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    x = x + attn_out(p["attn"], o, cfg)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x + mlp_apply(p["mlp"], h, cfg)
+
+
+def dec_layer_fwd(cfg, p, x, memory, positions, mem_positions, *, collect=False):
+    x = Lyr.res_constrain(cfg, x)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln1"], cfg.norm_eps))
+    q, k, v = attn_qkv(p["attn"], h, cfg, positions)
+    o = attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    x = x + attn_out(p["attn"], o, cfg)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["lnx"], cfg.norm_eps))
+    qx, kx, vx = attn_qkv(p["xattn"], h, cfg, positions)
+    # cross KV come from encoder memory
+    _, mk, mv = attn_qkv(p["xattn"], memory, cfg, mem_positions)
+    ox = attention(qx, mk, mv, causal=False, chunk=cfg.attn_chunk)
+    x = x + attn_out(p["xattn"], ox, cfg)
+    h = Lyr.sp_gather(cfg, rms_norm(x, p["ln2"], cfg.norm_eps))
+    x = x + mlp_apply(p["mlp"], h, cfg)
+    if collect:
+        k = constrain(k, "batch", None, None, None)
+        mk = constrain(mk, "batch", "kv_seq", None, None)
+        mv = constrain(mv, "batch", "kv_seq", None, None)
+        return x, (k, v, mk, mv)
+    return x, None
+
+
+def _scan_layers(body, x, stacked_params, extras=None, remat="full"):
+    """Scan ``body(carry, (params_slice, extra_slice))`` over layer dim 0."""
+    body = maybe_remat(body, remat)
+    xs = (stacked_params, extras) if extras is not None else stacked_params
+    y, outs = jax.lax.scan(body, x, xs)
+    return y, outs
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training)
+# ---------------------------------------------------------------------------
+
+def _cast_once(cfg, tree):
+    """Cast layer params to the compute dtype BEFORE the scan: FSDP
+    all-gathers then move bf16, not fp32 (EXPERIMENTS.md §Perf)."""
+    if not cfg.cast_params_once:
+        return tree
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, tree)
+
+
+def _lm_trunk(cfg, params, emb, positions, collect=False):
+    """Run the layer stack on embeddings. Returns (hidden, cache_parts)."""
+    fam = cfg.family
+    rp = cfg.remat_policy
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(x, p):
+            x, kv = dense_layer_fwd(cfg, p, x, positions, collect=collect)
+            return x, kv
+        x, kvs = _scan_layers(body, emb, _cast_once(cfg, params["layers"]), remat=rp)
+        return x, kvs
+
+    if fam == "ssm":
+        def body(x, p):
+            x, st = ssm_layer_fwd(cfg, p, x, collect=collect)
+            return x, st
+        x, states = _scan_layers(body, emb, _cast_once(cfg, params["layers"]), remat=rp)
+        return x, states
+
+    if fam == "hybrid":
+        g_ids, spans = hybrid_split(cfg)
+        x = emb
+        caches_g, caches_w = [], []
+        swa_off = 0
+
+        def swa_body(x, p):
+            x, c = hybrid_layer_fwd(cfg, p, x, positions,
+                                    window=cfg.swa_window, collect=collect)
+            return x, c
+
+        for gi, span in zip(range(len(g_ids)), spans):
+            if span > 0:
+                sl = jax.tree.map(lambda a: a[swa_off:swa_off + span],
+                                  _cast_once(cfg, params["swa"]))
+                x, cw = _scan_layers(swa_body, x, sl, remat=rp)
+                caches_w.append(cw)
+                swa_off += span
+            pg = jax.tree.map(lambda a: a[gi], _cast_once(cfg, params["global"]))
+            lyr = maybe_remat(
+                lambda x, p: hybrid_layer_fwd(cfg, p, x, positions, window=0,
+                                              collect=collect), rp)
+            x, cg = lyr(x, pg)
+            caches_g.append(cg)
+        # trailing span
+        rem = cfg.n_layers - len(g_ids) - swa_off
+        if rem > 0:
+            sl = jax.tree.map(lambda a: a[swa_off:], _cast_once(cfg, params["swa"]))
+            x, cw = _scan_layers(swa_body, x, sl, remat=rp)
+            caches_w.append(cw)
+        return x, (caches_g, caches_w)
+
+    raise ValueError(fam)
+
+
+def forward_lm(cfg, params, tokens, patches=None):
+    """Training/prefill forward for decoder-only families. Returns logits."""
+    dt = jnp.dtype(cfg.dtype)
+    emb = embed_tokens(params["tok"], tokens, cfg, dt)
+    if cfg.family == "vlm":
+        assert patches is not None
+        emb = jnp.concatenate([patches.astype(dt), emb], axis=1)
+    S = emb.shape[1]
+    positions = jnp.arange(S)
+    x, _ = _lm_trunk(cfg, params, emb, positions)
+    x = rms_norm(x, params["tok"]["final_norm"], cfg.norm_eps)
+    return lm_logits(params["tok"], x, cfg)
+
+
+def forward_encdec(cfg, params, frames, tokens):
+    dt = jnp.dtype(cfg.dtype)
+    mem = frames.astype(dt)
+    mem_pos = jnp.arange(mem.shape[1])
+    def enc_body(x, p):
+        return enc_layer_fwd(cfg, p, x, mem_pos), None
+    mem, _ = _scan_layers(enc_body, mem, _cast_once(cfg, params["enc"]), remat=cfg.remat_policy)
+    mem = rms_norm(mem, params["enc_final_norm"], cfg.norm_eps)
+
+    x = embed_tokens(params["tok"], tokens, cfg, dt)
+    pos = jnp.arange(x.shape[1])
+    def dec_body(x, p):
+        x, _ = dec_layer_fwd(cfg, p, x, mem, pos, mem_pos)
+        return x, None
+    x, _ = _scan_layers(dec_body, x, _cast_once(cfg, params["dec"]), remat=cfg.remat_policy)
+    x = rms_norm(x, params["tok"]["final_norm"], cfg.norm_eps)
+    return lm_logits(params["tok"], x, cfg)
+
+
+def loss_fn(cfg, params, batch):
+    """batch: dict with family-dependent inputs + labels (+optional mask)."""
+    if cfg.family == "encdec":
+        logits = forward_encdec(cfg, params, batch["frames"], batch["tokens"])
+        return softmax_xent(logits, batch["labels"], batch.get("mask"))
+    logits = forward_lm(cfg, params, batch["tokens"], batch.get("patches"))
+    if cfg.family == "vlm":
+        P = batch["patches"].shape[1]
+        logits = logits[:, P:]
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len, dtype=None):
+    """Zero cache pytree for decode. Shapes match cache_specs()."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    fam = cfg.family
+
+    def kv(n, T):
+        return (jnp.zeros((n, batch, T, Hkv, Dh), dt),
+                jnp.zeros((n, batch, T, Hkv, Dh), dt))
+
+    if fam in ("dense", "moe", "vlm"):
+        k, v = kv(cfg.n_layers, max_len)
+        return {"k": k, "v": v, "len": jnp.zeros((), jnp.int32)}
+    if fam == "ssm":
+        Din = cfg.d_inner
+        return {"h": jnp.zeros((cfg.n_layers, batch, Din, cfg.d_state), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, Din), dt),
+                "len": jnp.zeros((), jnp.int32)}
+    if fam == "hybrid":
+        g_ids, _ = hybrid_split(cfg)
+        nG, nW = len(g_ids), cfg.n_layers - len(g_ids)
+        W = min(cfg.swa_window, max_len)
+        kg, vg = kv(nG, max_len)
+        kw, vw = kv(nW, W)
+        Din = cfg.d_inner
+        return {"kg": kg, "vg": vg, "kw": kw, "vw": vw,
+                "wpos": jnp.full((nW, batch, W), -1, jnp.int32),
+                "hg": jnp.zeros((nG, batch, Din, cfg.d_state), jnp.float32),
+                "convg": jnp.zeros((nG, batch, cfg.d_conv - 1, Din), dt),
+                "hw": jnp.zeros((nW, batch, Din, cfg.d_state), jnp.float32),
+                "convw": jnp.zeros((nW, batch, cfg.d_conv - 1, Din), dt),
+                "len": jnp.zeros((), jnp.int32)}
+    if fam == "encdec":
+        dec_len = min(max_len, 4096)
+        k, v = kv(cfg.n_dec_layers, dec_len)
+        ck, cv = kv(cfg.n_dec_layers, max_len)
+        return {"k": k, "v": v, "ck": ck, "cv": cv,
+                "enc_len": jnp.zeros((), jnp.int32),
+                "len": jnp.zeros((), jnp.int32)}
+    raise ValueError(fam)
+
+
+def cache_specs(cfg, long_context=False):
+    """PartitionSpec pytree matching init_cache. KV sequence dim is sharded
+    (logical kv_seq / kv_seq_long) — decode attention lowers to a
+    flash-decoding-style partial-softmax combine over that axis."""
+    seq_ax = "kv_seq_long" if long_context else "kv_seq"
+    kvs = ax(None, "batch", seq_ax, None, None)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return {"k": kvs, "v": kvs, "len": ax()}
+    if fam == "ssm":
+        return {"h": ax(None, "batch", "tensor", None),
+                "conv": ax(None, "batch", None, "tensor"), "len": ax()}
+    if fam == "hybrid":
+        win = ax(None, "batch", "kv_seq", None, None)
+        return {"kg": kvs, "vg": kvs, "kw": win, "vw": win,
+                "wpos": ax(None, "batch", "kv_seq"),
+                "hg": ax(None, "batch", "tensor", None),
+                "convg": ax(None, "batch", None, "tensor"),
+                "hw": ax(None, "batch", "tensor", None),
+                "convw": ax(None, "batch", None, "tensor"),
+                "len": ax()}
+    if fam == "encdec":
+        dec = ax(None, "batch", None, None, None)
+        return {"k": dec, "v": dec, "ck": kvs, "cv": kvs,
+                "enc_len": ax(), "len": ax()}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(cfg, params, batch_inputs, max_len):
+    """Run full-sequence forward and populate a decode cache."""
+    dt = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    cache = init_cache(cfg, _prefill_batchsize(cfg, batch_inputs), max_len)
+
+    if fam == "encdec":
+        frames, tokens = batch_inputs["frames"], batch_inputs["tokens"]
+        mem = frames.astype(dt)
+        mem_pos = jnp.arange(mem.shape[1])
+        def enc_body(x, p):
+            return enc_layer_fwd(cfg, p, x, mem_pos), None
+        mem, _ = _scan_layers(enc_body, mem, _cast_once(cfg, params["enc"]), remat=cfg.remat_policy)
+        mem = rms_norm(mem, params["enc_final_norm"], cfg.norm_eps)
+        x = embed_tokens(params["tok"], tokens, cfg, dt)
+        pos = jnp.arange(x.shape[1])
+        def dec_body(x, p):
+            x, kv = dec_layer_fwd(cfg, p, x, mem, pos, mem_pos, collect=True)
+            return x, kv
+        x, (k, v, ck, cv) = _scan_layers(dec_body, x, _cast_once(cfg, params["dec"]),
+                                         remat=cfg.remat_policy)
+        S = tokens.shape[1]
+        cache["k"] = cache["k"].at[:, :, :S].set(k)
+        cache["v"] = cache["v"].at[:, :, :S].set(v)
+        cache["ck"] = cache["ck"].at[:, :, :ck.shape[2]].set(ck)
+        cache["cv"] = cache["cv"].at[:, :, :cv.shape[2]].set(cv)
+        cache["enc_len"] = jnp.asarray(ck.shape[2], jnp.int32)
+        cache["len"] = jnp.asarray(S, jnp.int32)
+        x = rms_norm(x, params["tok"]["final_norm"], cfg.norm_eps)
+        return lm_logits(params["tok"], x[:, -1:], cfg), cache
+
+    tokens = batch_inputs["tokens"]
+    emb = embed_tokens(params["tok"], tokens, cfg, dt)
+    if fam == "vlm" and batch_inputs.get("patches") is not None:
+        emb = jnp.concatenate([batch_inputs["patches"].astype(dt), emb], 1)
+    S = emb.shape[1]
+    positions = jnp.arange(S)
+    x, collected = _lm_trunk(cfg, params, emb, positions, collect=True)
+
+    if fam in ("dense", "moe", "vlm"):
+        k, v = collected
+        cache["k"] = cache["k"].at[:, :, :S].set(k)
+        cache["v"] = cache["v"].at[:, :, :S].set(v)
+    elif fam == "ssm":
+        h, conv = collected
+        cache["h"], cache["conv"] = h, conv
+    elif fam == "hybrid":
+        caches_g, caches_w = collected
+        W = cache["kw"].shape[2]
+        # globals: list of ((k,v), (h, conv)) per global layer
+        for i, ((k, v), (h, conv)) in enumerate(caches_g):
+            cache["kg"] = cache["kg"].at[i, :, :S].set(k)
+            cache["vg"] = cache["vg"].at[i, :, :S].set(v)
+            cache["hg"] = cache["hg"].at[i].set(h)
+            cache["convg"] = cache["convg"].at[i].set(conv)
+        off = 0
+        for (kv_st, (h, conv)) in caches_w:
+            k, v = kv_st
+            n = k.shape[0]
+            pos = jnp.arange(max(0, S - W), S)
+            slots = pos % W
+            cache["kw"] = cache["kw"].at[off:off + n, :, slots].set(k[:, :, pos])
+            cache["vw"] = cache["vw"].at[off:off + n, :, slots].set(v[:, :, pos])
+            cache["wpos"] = cache["wpos"].at[off:off + n, :, slots].set(pos)
+            cache["hw"] = cache["hw"].at[off:off + n].set(h)
+            cache["convw"] = cache["convw"].at[off:off + n].set(conv)
+            off += n
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    x = rms_norm(x, params["tok"]["final_norm"], cfg.norm_eps)
+    return lm_logits(params["tok"], x[:, -1:], cfg), cache
+
+
+def _prefill_batchsize(cfg, batch_inputs):
+    for k in ("tokens", "frames"):
+        if k in batch_inputs:
+            return batch_inputs[k].shape[0]
+    raise ValueError("no batch input")
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _cache_write(cache, val, pos):
+    """Write one token into [B, T, ...] at position ``pos`` (scalar, or [B]
+    for per-lane continuous batching)."""
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_index_in_dim(cache, val, pos, 1)
+    return jax.vmap(
+        lambda c, vv, pp: jax.lax.dynamic_update_index_in_dim(c, vv, pp, 0)
+    )(cache, val, pos)
+
+
+def _decode_attn_layer(cfg, p, x, k_cache, v_cache, pos, kv_len, *, window=0,
+                       wpos=None):
+    """One decode attention sublayer. ``pos`` is a scalar or a per-lane [B]
+    vector (continuous batching). Returns (attn_out, k, v, wpos)."""
+    positions = pos[None, None] if pos.ndim == 0 else pos[:, None]
+    q, k, v = attn_qkv(p["attn"], x, cfg, positions)
+    if window and wpos is not None:
+        slot = pos % k_cache.shape[1]
+        k_cache = _cache_write(k_cache, k[:, 0], slot)
+        v_cache = _cache_write(v_cache, v[:, 0], slot)
+        new_pos = jnp.broadcast_to(pos, wpos.shape[:1]).astype(jnp.int32)
+        if slot.ndim == 0:
+            wpos = jax.lax.dynamic_update_index_in_dim(wpos, new_pos, slot, 1)
+        else:
+            wpos = jax.vmap(lambda w, np_, s: jax.lax.
+                            dynamic_update_index_in_dim(w, np_, s, 0)
+                            )(wpos, new_pos, slot)
+        bias = jnp.where(wpos >= 0, 0.0, -1e30)[:, None, None, :].astype(jnp.float32)
+        kk = Lyr.repeat_kv(k_cache, cfg.n_heads // cfg.n_kv_heads)
+        vv = Lyr.repeat_kv(v_cache, cfg.n_heads // cfg.n_kv_heads)
+        o = Lyr._attn_core(q, kk, vv, bias)
+        return o, k_cache, v_cache, wpos
+    k_cache = _cache_write(k_cache, k[:, 0], pos)
+    v_cache = _cache_write(v_cache, v[:, 0], pos)
+    o = decode_attention(q, k_cache, v_cache, kv_len)
+    return o, k_cache, v_cache, None
+
+
+def decode_step(cfg, params, cache, token, patches=None):
+    """One-token decode. token [B,1] int32. Returns (logits [B,1,V], cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    pos = cache["len"]
+    kv_len = pos + 1
+    x = embed_tokens(params["tok"], token, cfg, dt)
+
+    if fam in ("dense", "moe", "vlm"):
+        # cache lives in the scan CARRY (updated via DUS at the layer index)
+        # rather than streaming through xs/ys — XLA keeps ONE cache buffer
+        # in place instead of double-buffering it (§Perf: ~-2x decode temp)
+        def body(carry, sl):
+            x, kall, vall = carry
+            p, i = sl
+            kc = jax.lax.dynamic_index_in_dim(kall, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vall, i, 0, keepdims=False)
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            o, kc, vc, _ = _decode_attn_layer(cfg, p, h, kc, vc, pos, kv_len)
+            x = x + attn_out(p["attn"], o, cfg)
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "router" in p["mlp"]:
+                x = x + Moe.moe_apply(p["mlp"], h, cfg.replace(moe_group=1))
+            else:
+                x = x + mlp_apply(p["mlp"], h, cfg)
+            kall = jax.lax.dynamic_update_index_in_dim(kall, kc, i, 0)
+            vall = jax.lax.dynamic_update_index_in_dim(vall, vc, i, 0)
+            return (x, kall, vall), None
+        L = _cast_once(cfg, params["layers"])["ln1"].shape[0]
+        (x, k, v), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (_cast_once(cfg, params["layers"]), jnp.arange(L, dtype=jnp.int32)))
+        cache = dict(cache, k=k, v=v, len=kv_len)
+
+    elif fam == "ssm":
+        def body(x, sl):
+            p, h0, c0 = sl
+            hh = rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, (h1, c1) = M.mamba_step(p["ssm"], hh, cfg, (h0, c0))
+            return x + y, (h1, c1)
+        x, (h, conv) = jax.lax.scan(body, x, (_cast_once(cfg, params["layers"]), cache["h"], cache["conv"]))
+        cache = dict(cache, h=h, conv=conv, len=kv_len)
+
+    elif fam == "hybrid":
+        g_ids, spans = hybrid_split(cfg)
+
+        def hybrid_decode(p, x, kc, vc, h0, c0, *, window, wpos=None):
+            hh = rms_norm(x, p["ln1"], cfg.norm_eps)
+            o, kc, vc, wpos = _decode_attn_layer(cfg, p, hh, kc, vc, pos, kv_len,
+                                                 window=window, wpos=wpos)
+            ao = attn_out(p["attn"], o, cfg)
+            so, (h1, c1) = M.mamba_step(p["ssm"], hh, cfg, (h0, c0))
+            fused = 0.5 * (rms_norm(ao, p["ln_attn"], cfg.norm_eps)
+                           + rms_norm(so, p["ln_ssm"], cfg.norm_eps))
+            x = x + fused
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(p["mlp"], h2, cfg)
+            return x, kc, vc, h1, c1, wpos
+
+        def swa_body(x, sl):
+            p, kc, vc, wp, h0, c0 = sl
+            x, kc, vc, h1, c1, wp = hybrid_decode(p, x, kc, vc, h0, c0,
+                                                  window=cfg.swa_window, wpos=wp)
+            return x, (kc, vc, wp, h1, c1)
+
+        new_g = {k: [] for k in ("kg", "vg", "hg", "convg")}
+        ws_out, off = [], 0
+        for gi, span in enumerate(spans):
+            if span > 0:
+                sl = jax.tree.map(lambda a: a[off:off + span],
+                                  (_cast_once(cfg, params["swa"]), cache["kw"], cache["vw"],
+                                   cache["wpos"], cache["hw"], cache["convw"]))
+                x, outs = jax.lax.scan(swa_body, x, sl)
+                ws_out.append(outs)
+                off += span
+            if gi < len(g_ids):
+                pg = jax.tree.map(lambda a: a[gi], _cast_once(cfg, params["global"]))
+                x, kc, vc, h1, c1, _ = hybrid_decode(
+                    pg, x, cache["kg"][gi], cache["vg"][gi],
+                    cache["hg"][gi], cache["convg"][gi], window=0)
+                for key, val in zip(("kg", "vg", "hg", "convg"), (kc, vc, h1, c1)):
+                    new_g[key].append(val)
+        if ws_out:
+            kw, vw, wp, hw, convw = [jnp.concatenate([o[i] for o in ws_out], 0)
+                                     for i in range(5)]
+        else:
+            kw, vw, wp, hw, convw = (cache["kw"], cache["vw"], cache["wpos"],
+                                     cache["hw"], cache["convw"])
+        cache = dict(cache,
+                     kg=jnp.stack(new_g["kg"]), vg=jnp.stack(new_g["vg"]),
+                     hg=jnp.stack(new_g["hg"]), convg=jnp.stack(new_g["convg"]),
+                     kw=kw, vw=vw, wpos=wp, hw=hw, convw=convw, len=kv_len)
+
+    elif fam == "encdec":
+        mem_len = cache["enc_len"]
+        def body(carry, sl):
+            x, kall, vall = carry
+            p, ck, cv, i = sl
+            kc = jax.lax.dynamic_index_in_dim(kall, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vall, i, 0, keepdims=False)
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            o, kc, vc, _ = _decode_attn_layer(cfg, p, h, kc, vc, pos, kv_len)
+            x = x + attn_out(p["attn"], o, cfg)
+            h = rms_norm(x, p["lnx"], cfg.norm_eps)
+            qx, _, _ = attn_qkv(p["xattn"], h, cfg,
+                                pos[None, None] if pos.ndim == 0
+                                else pos[:, None])
+            ox = decode_attention(qx, ck, cv, mem_len)
+            x = x + attn_out(p["xattn"], ox, cfg)
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(p["mlp"], h, cfg)
+            kall = jax.lax.dynamic_update_index_in_dim(kall, kc, i, 0)
+            vall = jax.lax.dynamic_update_index_in_dim(vall, vc, i, 0)
+            return (x, kall, vall), None
+        Ld = _cast_once(cfg, params["dec"])["ln1"].shape[0]
+        (x, k, v), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (_cast_once(cfg, params["dec"]), cache["ck"], cache["cv"],
+             jnp.arange(Ld, dtype=jnp.int32)))
+        cache = dict(cache, k=k, v=v, len=kv_len)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["tok"]["final_norm"], cfg.norm_eps)
+    return lm_logits(params["tok"], x, cfg), cache

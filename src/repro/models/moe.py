@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN.
+
+Two dispatch implementations:
+
+* ``capacity`` — GShard/Switch-style grouped capacity dispatch via one-hot
+  matmuls (TPU-native: everything is a GEMM on the MXU; overcompute bounded
+  by ``top_k * capacity_factor / 1``). Tokens over capacity are dropped
+  (residual passes them through). Used for the production dry-runs.
+* ``dense`` — computes every expert for every token and combines with router
+  weights. Exact (no dropping), wasteful by E/top_k; used as the correctness
+  oracle in tests and for tiny smoke configs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import TSpec
+from repro.models.sharding import constrain, weight_gather
+
+
+def moe_template(cfg, stacked=None):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    L = (stacked,) if stacked else ()
+    LN = (None,) if stacked else ()
+    return {
+        "router": TSpec(L + (D, E), LN + (None, None), 0.02),
+        "w_gate": TSpec(L + (E, D, F), LN + ("expert", "fsdp", "tensor"), 0.02),
+        "w_up": TSpec(L + (E, D, F), LN + ("expert", "fsdp", "tensor"), 0.02),
+        "w_down": TSpec(L + (E, F, D), LN + ("expert", "tensor", "fsdp"),
+                        0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _router_probs(p, x, cfg):
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)           # [..., E]
+
+
+def _expert_ffn(p, xe, dt, cfg=None):
+    """xe [..., E, C, D] per-expert token blocks -> same shape."""
+    wg = weight_gather(cfg, p["w_gate"].astype(dt), ("expert", "fsdp", "tensor"))
+    wu = weight_gather(cfg, p["w_up"].astype(dt), ("expert", "fsdp", "tensor"))
+    wd = weight_gather(cfg, p["w_down"].astype(dt), ("expert", "tensor", "fsdp"))
+    h = jnp.einsum("...ecd,edf->...ecf", xe, wg)
+    u = jnp.einsum("...ecd,edf->...ecf", xe, wu)
+    h = jax.nn.silu(h) * u
+    h = constrain(h, "batch", None, None, "tensor")
+    return jnp.einsum("...ecf,efd->...ecd", h, wd)
+
+
+def moe_apply_dense(p, x, cfg):
+    """Exact dense-compute MoE (oracle)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    probs = _router_probs(p, x, cfg)                 # [B,S,E]
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    gates = jnp.zeros_like(probs).at[
+        jnp.arange(B)[:, None, None], jnp.arange(S)[None, :, None], topi
+    ].set(topv)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    h = jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(dt))
+    y = jnp.einsum("bsef,efd->bsed", jax.nn.silu(h) * u, p["w_down"].astype(dt))
+    return jnp.einsum("bsed,bse->bsd", y, gates.astype(dt))
+
+
+def moe_apply_capacity(p, x, cfg):
+    """GShard grouped capacity dispatch.
+
+    x [B,S,D] -> group tokens into [G, g, D]; per group, each expert takes at
+    most C = ceil(g * top_k / E * capacity_factor) tokens (one-hot position
+    assignment via masked cumsum); dispatch/combine are einsums.
+    """
+    dt = x.dtype
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(cfg.moe_group, T)
+    while T % g:          # largest divisor of T not exceeding moe_group
+        g -= 1
+    G = T // g
+    C = int(math.ceil(g * K / E * cfg.capacity_factor))
+    C = min(C, g)
+
+    xt = x.reshape(G, g, D)
+    probs = _router_probs(p, xt, cfg)                # [G,g,E] fp32
+    topv, topi = jax.lax.top_k(probs, K)             # [G,g,K]
+    denom = jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    topv = topv / denom
+
+    # expert one-hots per routing slot k: [G,g,K,E]
+    sel = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    # priority: iterate k slots; position_in_expert via cumsum over tokens
+    # flatten slot-major so slot 0 of all tokens beats slot 1 (GShard order)
+    sel_sm = sel.transpose(0, 2, 1, 3).reshape(G, K * g, E)       # [G,K*g,E]
+    pos = jnp.cumsum(sel_sm, axis=1) - sel_sm                      # [G,K*g,E]
+    keep = (pos < C).astype(jnp.float32) * sel_sm
+    pos = jnp.where(keep > 0, pos, 0.0)
+    keep_t = keep.reshape(G, K, g, E).transpose(0, 2, 1, 3)        # [G,g,K,E]
+    pos_t = pos.reshape(G, K, g, E).transpose(0, 2, 1, 3)
+
+    # a token routes to each expert at most once, so reducing over the K
+    # slot axis FIRST avoids materializing the 5-D [G,g,K,E,C] one-hot
+    sel_e = keep_t.sum(axis=2)                                     # [G,g,E]
+    pos_e = (keep_t * pos_t).sum(axis=2)                           # [G,g,E]
+    gate_e = jnp.einsum("gsk,gske->gse", topv, keep_t)             # [G,g,E]
+    slot_iota = jnp.arange(C, dtype=jnp.float32)
+    pos_oh = (pos_e[..., None] == slot_iota) & (sel_e[..., None] > 0)
+    dispatch = pos_oh.astype(dt)                                   # [G,g,E,C]
+    combine = gate_e[..., None].astype(dt) * dispatch
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt)                # [G,E,C,D]
+    xe = constrain(xe, "batch", None, None, None)
+    ye = _expert_ffn(p, xe, dt, cfg)                               # [G,E,C,D]
+    yt = jnp.einsum("gsec,gecd->gsd", combine, ye)
+    return constrain(yt.reshape(B, S, D), "batch", None, None)
+
+
+def moe_apply(p, x, cfg):
+    if cfg.moe_impl == "dense":
+        return moe_apply_dense(p, x, cfg)
+    return moe_apply_capacity(p, x, cfg)
+
+
+def aux_load_balance_loss(p, x, cfg):
+    """Switch-style load-balance auxiliary loss (fraction * prob per expert)."""
+    probs = _router_probs(p, x, cfg).reshape(-1, cfg.n_experts)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), 0)
+    pmean = probs.mean(0)
+    return cfg.n_experts * jnp.sum(frac * pmean)

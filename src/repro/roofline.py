@@ -1,0 +1,132 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds per step:
+
+    compute    = HLO_FLOPs_per_device (scan-corrected) / 197 TF/s bf16
+    memory     = HLO_bytes_per_device (scan-corrected) / 819 GB/s HBM
+    collective = collective_bytes_per_device (corrected) / 50 GB/s ICI
+
+cost_analysis is per-partition (per-device) on the SPMD module, so terms
+are per-chip directly. ``roofline_fraction`` = ideal compute time of the
+*useful* MODEL_FLOPS divided by the bounding term — the fraction of peak
+the compiled program could reach if it hit the dominant roof.
+
+CPU-backend caveat (recorded per row): XLA-CPU emulates bf16 in fp32, so
+``bytes``/``temp`` overstate bf16 traffic by up to 2x vs real TPU lowering.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12        # v5e bf16
+HBM_BW = 819e9             # v5e HBM
+ICI_BW = 50e9              # effective per-chip ICI
+
+RESULTS = pathlib.Path(__file__).resolve().parents[2] / "results" / "dryrun"
+
+
+def load_cells(mesh="pod256"):
+    cells = {}
+    d = RESULTS / mesh
+    if not d.exists():
+        return cells
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("ok"):
+            cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+def terms(rec) -> dict:
+    chips = rec["n_chips"]
+    flops = rec.get("flops_corrected", rec["flops"])
+    byts = rec.get("bytes_corrected", rec["bytes_accessed"])
+    coll = rec.get("coll_corrected",
+                   rec["collectives"]["total_bytes"])
+    t_comp = flops / PEAK_FLOPS
+    # memory term from BUFFER TRAFFIC (args read + outputs written + temps
+    # written-and-read once) — full-program totals, no scan correction
+    # needed. cost_analysis "bytes accessed" ignores fusion and wildly
+    # overstates HBM traffic; it is kept as an upper bound column.
+    mem = rec["memory"]
+    traffic = (mem["argument_bytes"] + mem["output_bytes"]
+               + 2 * mem["temp_bytes"])
+    t_mem = traffic / HBM_BW
+    t_mem_hlo_upper = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    bound = max(t_comp, t_mem, t_coll)
+    dominant = ("compute" if bound == t_comp
+                else "memory" if bound == t_mem else "collective")
+    model = rec.get("model_flops", 0.0)
+    ideal = model / chips / PEAK_FLOPS
+    # HLO cost analysis cannot see while-loop trip counts, so useful_ratio
+    # is undefined for the beam-search cells (MODEL_FLOPS is analytical)
+    svf = rec["arch"].startswith("svfusion")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_mem_hlo_upper_s": t_mem_hlo_upper,
+        "dominant": dominant,
+        "model_flops": model,
+        "useful_ratio": "n/a" if svf else
+        ((model / (flops * chips)) if flops else 0.0),
+        "roofline_fraction": (ideal / bound) if bound else 0.0,
+        "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "arg_gb": rec["memory"]["argument_bytes"] / 1e9,
+        "notes": rec.get("notes", ""),
+    }
+
+
+def what_would_help(t) -> str:
+    if t["dominant"] == "collective":
+        return ("cut collective bytes: larger per-hop fusion, reduce-scatter"
+                " instead of all-gather+slice, or keep weights resident"
+                " (less FSDP regathering)")
+    if t["dominant"] == "memory":
+        return ("raise arithmetic intensity: fuse attention (flash kernel),"
+                " larger matmul tiles, bf16 end-to-end, fewer remat"
+                " round-trips")
+    if t["useful_ratio"] < 0.6:
+        return ("recover wasted compute: remat policy, causal-block skip,"
+                " unpadded head sharding")
+    return "near compute roof: only kernel-level MXU utilization remains"
+
+
+def table(mesh="pod256") -> list[dict]:
+    return [terms(r) for r in load_cells(mesh).values()]
+
+
+def markdown_table(rows, cols, header=None) -> str:
+    out = ["| " + " | ".join(header or cols) + " |",
+           "|" + "---|" * len(cols)]
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r[c]
+            if isinstance(v, float):
+                if "ratio" in c or "fraction" in c:
+                    cells.append(f"{v:.3f}")
+                elif v and (abs(v) < 1e-3 or abs(v) > 1e5):
+                    cells.append(f"{v:.2e}")
+                else:
+                    cells.append(f"{v:.3f}")
+            else:
+                cells.append(str(v))
+        out.append("| " + " | ".join(cells) + " |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("pod256", "pod512"):
+        rows = table(mesh)
+        rows.sort(key=lambda r: (r["arch"], r["shape"]))
+        print(f"\n## {mesh}\n")
+        print(markdown_table(rows, ["arch", "shape", "t_compute_s",
+                                    "t_memory_s", "t_collective_s",
+                                    "dominant", "useful_ratio",
+                                    "roofline_fraction", "temp_gb"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""LM serving engine: continuous batching + deadline-aware scheduling +
+straggler mitigation.
+
+Continuous batching: a fixed pool of decode slots; finished/empty slots are
+refilled from the admission queue each tick (no head-of-line blocking on
+long generations). Straggler mitigation: per-tick deadline — if a tick
+exceeds ``straggler_factor`` × the EWMA tick time, the engine flags the
+slot batch, re-enqueues its requests and re-dispatches (on real pods:
+re-route to a healthy replica; here: re-dispatch after recompile/jitter).
+Elastic hook: ``on_remesh`` lets the driver swap shardings after topology
+changes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as Mdl
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 16
+    submitted: float = field(default_factory=time.perf_counter)
+    tokens: list = field(default_factory=list)
+    done: bool = False
+    finished_at: float = 0.0
+    retries: int = 0
+
+
+class ServeEngine:
+    """Batched incremental decoding over the model zoo."""
+
+    def __init__(self, cfg, params, *, slots=8, max_len=256,
+                 straggler_factor=8.0, max_retries=1):
+        self.cfg = cfg.replace(remat_policy="none")
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.straggler_factor = straggler_factor
+        self.max_retries = max_retries
+        self.admit_q: "queue.Queue[Request]" = queue.Queue()
+        self.active: list[Optional[Request]] = [None] * slots
+        self.completed: list[Request] = []
+        self.tick_ewma = None
+        self.stragglers = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t: Mdl.decode_step(self.cfg, p, c, t))
+        self.cache = Mdl.init_cache(self.cfg, slots, max_len)
+        # per-lane positions (continuous batching): a fresh request restarts
+        # its lane at position 0; stale cache beyond lane_len is never
+        # unmasked because attention caps at the lane's own length
+        self.lane_len = np.zeros(slots, np.int32)
+        self.tokens = np.zeros((slots, 1), np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.admit_q.put(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is not None:
+                continue
+            try:
+                req = self.admit_q.get_nowait()
+            except queue.Empty:
+                return
+            self.active[s] = req
+            # prefill-by-decode for simplicity at serving scale: feed prompt
+            # tokens one per tick (batch prefill is used by the RAG driver)
+            req._feed = list(req.prompt)
+            self.lane_len[s] = 0
+            self.tokens[s, 0] = req._feed.pop(0)
+
+    def tick(self):
+        """One decode step for the whole slot pool. Returns #active."""
+        self._admit()
+        if all(r is None for r in self.active):
+            return 0
+        t0 = time.perf_counter()
+        self.cache = dict(self.cache, len=jnp.asarray(self.lane_len))
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(self.tokens))
+        active_mask = np.array([r is not None for r in self.active])
+        self.lane_len = np.where(active_mask,
+                                 np.minimum(self.lane_len + 1,
+                                            self.max_len - 1),
+                                 self.lane_len)
+        logits = np.asarray(logits[:, 0])
+        dt = time.perf_counter() - t0
+        ewma = self.tick_ewma
+        self.tick_ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+
+        # straggler check (pod-level analogue: re-dispatch to replica)
+        if ewma is not None and dt > self.straggler_factor * ewma:
+            self.stragglers += 1
+            for s, req in enumerate(self.active):
+                if req is not None and req.retries < self.max_retries:
+                    req.retries += 1
+                    req._feed = list(req.prompt)
+                    req.tokens = []
+                    self.admit_q.put(req)
+                    self.active[s] = None
+            return sum(r is not None for r in self.active)
+
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if req._feed:                      # still feeding the prompt
+                self.tokens[s, 0] = req._feed.pop(0)
+                continue
+            nxt = int(np.argmax(logits[s]))
+            req.tokens.append(nxt)
+            self.tokens[s, 0] = nxt
+            if len(req.tokens) >= req.max_new:
+                req.done = True
+                req.finished_at = time.perf_counter()
+                self.completed.append(req)
+                self.active[s] = None
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_ticks=10_000):
+        ticks = 0
+        while (not self.admit_q.empty() or any(
+                r is not None for r in self.active)) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks

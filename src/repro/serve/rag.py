@@ -1,0 +1,71 @@
+"""Retrieval-augmented serving: the paper's motivating workload.
+
+The LM produces query embeddings (mean-pooled token embeddings — the
+standard cheap dual-encoder stand-in); SVFusion retrieves fresh context
+ids; retrieved token chunks are prepended to the prompt. New documents
+stream into the index online, so retrieval reflects inserts made seconds
+earlier (index freshness, paper §1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, SVFusionEngine
+from repro.models import model as Mdl
+
+
+@dataclass
+class Doc:
+    doc_id: int
+    tokens: np.ndarray      # [T] int32
+
+
+class RAGPipeline:
+    def __init__(self, cfg, params, index_cfg: EngineConfig, dim=None):
+        self.cfg = cfg
+        self.params = params
+        self.dim = dim or cfg.d_model
+        seed_vecs = np.random.default_rng(0).normal(
+            size=(max(256, index_cfg.degree * 4), self.dim)).astype(np.float32)
+        self.index = SVFusionEngine(seed_vecs, index_cfg)
+        self.docs: dict[int, Doc] = {}
+        self._embed = jax.jit(self._embed_fn)
+
+    def _embed_fn(self, tokens):
+        emb = Mdl.embed_tokens(self.params["tok"], tokens, self.cfg,
+                               jnp.bfloat16)
+        return jnp.mean(emb.astype(jnp.float32), axis=1)
+
+    def embed(self, tokens: np.ndarray) -> np.ndarray:
+        return np.asarray(self._embed(jnp.asarray(tokens, jnp.int32)))
+
+    # ------------------------------------------------------------------
+    def ingest(self, docs: list[Doc]):
+        """Stream new documents into the live index."""
+        toks = np.stack([d.tokens for d in docs])
+        vecs = self.embed(toks)
+        ids = self.index.insert(vecs)
+        for i, d in zip(ids, docs):
+            self.docs[int(i)] = d
+        return ids
+
+    def evict(self, ids):
+        self.index.delete(np.asarray(ids))
+        for i in ids:
+            self.docs.pop(int(i), None)
+
+    def retrieve(self, prompt_tokens: np.ndarray, k=4) -> list[Doc]:
+        q = self.embed(prompt_tokens[None, :])
+        ids, _ = self.index.search(q)
+        return [self.docs[int(i)] for i in ids[0][:k] if int(i) in self.docs]
+
+    def augment(self, prompt_tokens: np.ndarray, k=4, budget=128):
+        """Prepend retrieved chunks (truncated to the context budget)."""
+        docs = self.retrieve(prompt_tokens, k)
+        ctx = [d.tokens for d in docs]
+        flat = np.concatenate(ctx)[:budget] if ctx else np.zeros(0, np.int32)
+        return np.concatenate([flat.astype(np.int32), prompt_tokens])

@@ -1,0 +1,69 @@
+"""Training loop: jit'd step + checkpoint/restart + metrics.
+
+Fault tolerance: checkpoints are atomic and resumable; ``run`` restores the
+newest valid checkpoint and continues from there (restart-safe), saving
+asynchronously every ``ckpt_every`` steps.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as Mdl
+from repro.train import optimizer as Opt
+from repro.train.checkpoint import CheckpointManager
+from repro.train.data import TokenPipeline
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    restored_from: int
+
+
+def make_step(cfg, adam: Opt.AdamConfig):
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: Mdl.loss_fn(cfg, p, batch))(params)
+        params, opt_state, metrics = Opt.adam_update(params, grads,
+                                                     opt_state, adam)
+        return params, opt_state, loss
+    return step
+
+
+def run(cfg, *, steps=50, batch=4, seq=64, ckpt_dir=None, ckpt_every=20,
+        seed=0, adam=None, params=None) -> TrainResult:
+    adam = adam or Opt.AdamConfig(lr=1e-3, warmup=10, total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = Mdl.init_params(cfg, key)
+    opt_state = Opt.init_adam(params, adam)
+    step_fn = make_step(cfg, adam)
+    pipe = TokenPipeline(cfg.vocab, batch, seq, seed=seed)
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start, restored = 0, -1
+    if mgr is not None:
+        s, tree = mgr.restore((params, opt_state))
+        if s is not None:
+            params, opt_state = tree
+            start, restored = s, s
+
+    losses = []
+    for i in range(start, steps):
+        batch_np = next(pipe)
+        batch_dev = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch_dev)
+        losses.append(float(loss))
+        if mgr is not None and (i + 1) % ckpt_every == 0:
+            mgr.save_async(i + 1, (params, opt_state))
+    if mgr is not None:
+        mgr.wait()
+    pipe.close()
+    return TrainResult(losses, steps, restored)

@@ -1,0 +1,34 @@
+"""Dry-run smoke: one LM cell + the SVFusion cell lower+compile on the
+production 256-chip mesh in a subprocess (the test process keeps its single
+real device)."""
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(arch, shape):
+    prog = f"""
+import os, sys, tempfile, pathlib
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, {SRC!r})
+import repro.launch.dryrun as dr
+dr.RESULTS = pathlib.Path(tempfile.mkdtemp())   # don't touch results/
+rec = dr.run_cell({arch!r}, {shape!r}, multi_pod=False, force=True)
+assert rec["ok"], rec.get("error")
+assert rec["flops_corrected"] > 0
+print("CELL_OK", rec["memory"]["temp_bytes"])
+"""
+    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=560)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "CELL_OK" in res.stdout
+
+
+def test_dryrun_lm_cell():
+    _run("qwen3_0p6b", "decode_32k")
+
+
+def test_dryrun_svfusion_cell():
+    _run("svfusion_msturing", "search_1k")

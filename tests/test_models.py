@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness assertions, and prefill/decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, load_config, load_smoke_config
+from repro.models import model as Mdl
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=33):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens,
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            KEY, (B, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(KEY, (B, 16, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_loads(arch):
+    cfg = load_config(arch)
+    assert cfg.n_layers >= 24 and cfg.vocab > 30000
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = load_smoke_config(arch)
+    params = Mdl.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: Mdl.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+    # one SGD step decreases loss locally
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype),
+                           params, grads)
+    loss2 = Mdl.loss_fn(cfg, params2, batch)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_parity(arch):
+    cfg = load_smoke_config(arch)
+    if cfg.family == "moe":
+        cfg = cfg.replace(moe_impl="dense")  # capacity dispatch is
+        # batch-grouping dependent; dense impl is the exact oracle
+    params = Mdl.init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S + 1)
+    tokens = batch["tokens"]
+
+    if cfg.family == "encdec":
+        full = Mdl.forward_encdec(cfg, params, batch["frames"], tokens)
+        pre_in = {"frames": batch["frames"], "tokens": tokens[:, :S]}
+    else:
+        full = Mdl.forward_lm(cfg, params, tokens, batch.get("patches"))
+        pre_in = {k: (v[:, :S] if k == "tokens" else v)
+                  for k, v in batch.items() if k in ("tokens", "patches")}
+    lg_pre, cache = Mdl.prefill(cfg, params, pre_in, max_len=64)
+    lg_dec, cache2 = Mdl.decode_step(cfg, params, cache, tokens[:, S:S + 1])
+    off = cfg.n_patches if cfg.family == "vlm" else 0
+
+    np.testing.assert_allclose(np.asarray(full[:, off + S - 1]),
+                               np.asarray(lg_pre[:, 0]), rtol=2e-2, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(full[:, off + S]),
+                               np.asarray(lg_dec[:, 0]), rtol=2e-2, atol=1e-2)
+    assert int(cache2["len"]) == S + 1 + off  # vlm caches patch positions too
+
+
+def test_moe_capacity_close_to_dense():
+    cfg = load_smoke_config("granite_moe_1b").replace(capacity_factor=8.0)
+    params = Mdl.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab)
+    y_cap = Mdl.forward_lm(cfg, params, tokens)
+    y_dense = Mdl.forward_lm(cfg.replace(moe_impl="dense"), params, tokens)
+    # with generous capacity no tokens drop -> implementations agree
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_dense),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_multi_step_training_decreases_loss():
+    cfg = load_smoke_config("smollm_135m")
+    params = Mdl.init_params(cfg, KEY)
+    batch = make_batch(cfg, B=4, S=64)
+    losses = []
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(lambda q: Mdl.loss_fn(cfg, q, batch))(p)
+        return l, jax.tree.map(lambda a, b: a - 0.03 * b.astype(a.dtype), p, g)
+
+    for _ in range(8):
+        loss, params = step(params)
+        losses.append(float(loss))
+    # robust trend check: strictly improving on average, meaningful delta
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]) - 0.03
+    assert losses[-1] < losses[0]
