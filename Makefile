@@ -1,0 +1,17 @@
+# Mechanical pass/fail bar for every PR.
+#
+#   make verify    — the tier-1 suite (ROADMAP.md)
+#   make bench-disk — the three-tier serving benchmark (fig. 11)
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: verify test bench-disk
+
+verify:
+	$(PY) -m pytest -x -q
+
+test: verify
+
+bench-disk:
+	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py

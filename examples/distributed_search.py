@@ -10,6 +10,7 @@ import jax                  # noqa: E402
 import jax.numpy as jnp     # noqa: E402
 import numpy as np          # noqa: E402
 
+from repro import compat                                      # noqa: E402
 from repro.core.build import build_graph                      # noqa: E402
 from repro.core.distributed import make_distributed_search    # noqa: E402
 from repro.core.search import brute_force_topk, recall_at_k   # noqa: E402
@@ -41,7 +42,7 @@ def main():
         "f_recent": np.zeros((N,), np.float32),
     }
     Q = rng.normal(size=(64, D)).astype(np.float32)
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         jidx = {k: jnp.asarray(v) for k, v in idx.items()}
         ids, dists = jax.jit(step)(jidx, jnp.asarray(Q), jax.random.PRNGKey(0))
         ids.block_until_ready()

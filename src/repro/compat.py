@@ -1,0 +1,110 @@
+"""Version-guarded JAX compatibility layer.
+
+The repo targets the mesh/sharding API of recent JAX, but the pinned
+environment ships JAX 0.4.37 where several entry points do not exist:
+
+* ``jax.sharding.AxisType`` / ``axis_types=`` on ``jax.make_mesh``
+* ``jax.sharding.get_abstract_mesh`` (the active-mesh query)
+* ``jax.set_mesh`` (the mesh context manager)
+* ``jax.shard_map`` (still ``jax.experimental.shard_map`` with
+  ``check_rep`` instead of ``check_vma``)
+
+Every helper here resolves to the native API when present and otherwise
+falls back to the 0.4.37 equivalent, so call sites never branch on
+versions themselves. No other module should touch these APIs directly.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, auto_axes: bool = True):
+    """``jax.make_mesh`` with Auto axis types when the API supports them.
+
+    On 0.4.37 there is no ``axis_types`` parameter (every axis behaves as
+    the legacy auto mode), so the argument is simply dropped.
+    """
+    if _HAS_AXIS_TYPE and auto_axes:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+
+
+def get_abstract_mesh():
+    """The mesh active in the current context, or None.
+
+    Recent JAX: ``jax.sharding.get_abstract_mesh()``. 0.4.37: the physical
+    mesh installed by the ``with mesh:`` context manager (it exposes the
+    same ``empty`` / ``axis_names`` / ``axis_sizes`` surface the callers
+    use). Returns None when no mesh is active so callers can uniformly
+    test ``mesh is None or mesh.empty``.
+    """
+    if _HAS_GET_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` (``jax.set_mesh`` analogue).
+
+    On 0.4.37 the legacy ``with mesh:`` form installs the mesh into the
+    thread's resource env, which is what pjit/shard_map consult.
+    """
+    if _HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` with the pre-0.5 ``psum(1, axis)`` fallback
+    (constant-folds to the static mesh axis size inside shard_map/pmap)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def resolve_shardings(tree):
+    """Make a PartitionSpec tree acceptable to ``jax.jit`` shardings args.
+
+    Recent JAX accepts raw PartitionSpecs under an active mesh; 0.4.37
+    requires concrete ``NamedSharding``s, so specs are bound to the mesh
+    installed by :func:`use_mesh`. Must be called inside the mesh context.
+    """
+    if _HAS_SET_MESH or tree is None:
+        return tree
+    mesh = get_abstract_mesh()
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec)
+        else s,
+        tree, is_leaf=lambda s: isinstance(s, PartitionSpec))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename bridged."""
+    if _HAS_SHARD_MAP:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -160,6 +160,31 @@ def build_graph(vectors, degree, n_max=None, *, n_partitions=1,
     return g._replace(e_in=compute_e_in(g.nbrs, n_max))
 
 
+def build_tiered_backend(vectors, degree, disk_path, *, disk_capacity=None,
+                         host_window=None, **kw):
+    """Build the full graph, spill vectors + rows to the disk tier and
+    return a ``tiers.TieredBackend`` (paper Fig. 11: the GPU-CPU-disk
+    form of the index). The graph build itself runs in memory — pass
+    ``n_partitions > 1`` for the bounded-window partitioned build — and
+    only the per-id metadata directory (alive/e_in/version) stays host-
+    resident afterwards; vectors and adjacency live behind the store.
+    """
+    from repro.core.tiers import DiskTier, TieredBackend, TieredStore
+    vectors = np.asarray(vectors, np.float32)
+    n, dim = vectors.shape
+    cap = disk_capacity or n
+    if cap < n:
+        raise ValueError(f"disk_capacity {cap} < initial dataset {n}")
+    window = host_window or max(64, cap // 4)
+    g = build_graph(vectors, degree, n_max=n, **kw)
+    disk = DiskTier(disk_path, cap, dim, degree)
+    disk.write(np.arange(n), vectors, np.asarray(g.nbrs[:n], np.int32))
+    backend = TieredBackend(TieredStore(disk, window), n)
+    backend.alive[:n] = np.asarray(g.alive[:n])
+    backend.e_in[:n] = np.asarray(g.e_in[:n])
+    return backend
+
+
 def build_index(vectors, degree=32, cache_slots=1024, n_max=None,
                 theta=1.0, alpha=1.0, beta=1.0, warm=True, **kw) -> IndexState:
     """Build graph + cache tiers. Cold-start warm-up (paper §4.4) preloads

@@ -22,6 +22,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import CacheState, GraphState, IndexState, SearchParams, Stats
 
@@ -30,6 +31,14 @@ def f_lambda(cache: CacheState, graph: GraphState):
     """F_λ(x) = α·F_recent + β·log(1+E_in) (paper eq. 2)."""
     return (cache.alpha * cache.f_recent
             + cache.beta * jnp.log1p(graph.e_in.astype(jnp.float32)))
+
+
+def f_lambda_np(f_recent, e_in, alpha=1.0, beta=1.0):
+    """Host-side F_λ over numpy mirrors — the SAME predictor drives both
+    ends of the hierarchy: device-cache promotion (here / apply_wavp) and
+    host-window demotion order in ``tiers.TieredStore`` (paper §4.3)."""
+    return (np.float32(alpha) * np.asarray(f_recent, np.float32)
+            + np.float32(beta) * np.log1p(np.asarray(e_in, np.float32)))
 
 
 def _policy_scores(policy, cache, graph):
@@ -48,7 +57,7 @@ def apply_wavp(state: IndexState, acc_ids, acc_hit, sp: SearchParams,
 
     acc_ids [B, I*R] accessed ids (-1 pad), acc_hit [B, I*R] hit flags.
     """
-    graph, cache, stats = state
+    graph, cache, stats = state.graph, state.cache, state.stats
     N = graph.capacity
     M = cache.n_slots
 
@@ -122,9 +131,13 @@ def apply_wavp(state: IndexState, acc_ids, acc_hit, sp: SearchParams,
 
     slot_hid = jnp.concatenate([cache.slot_hid, jnp.full((1,), -1, jnp.int32)])
     slot_hid = slot_hid.at[vslot].set(jnp.where(improves, new_hid, -1))[:M]
-    vec_pad = jnp.concatenate([cache.vectors,
-                               jnp.zeros((1, cache.vectors.shape[1]))], 0)
-    vec_pad = vec_pad.at[vslot].set(graph.vectors[jnp.clip(new_hid, 0)])
+    # pad row carries the cache dtype: a default-fp32 pad would silently
+    # promote a bf16 bandwidth tier to fp32 (2x device-cache memory)
+    vec_pad = jnp.concatenate(
+        [cache.vectors,
+         jnp.zeros((1, cache.vectors.shape[1]), cache.vectors.dtype)], 0)
+    vec_pad = vec_pad.at[vslot].set(
+        graph.vectors[jnp.clip(new_hid, 0)].astype(cache.vectors.dtype))
     vectors = vec_pad[:M]
     ver_pad = jnp.concatenate([cache.slot_ver, jnp.zeros((1,), jnp.int32)])
     ver_pad = ver_pad.at[vslot].set(graph.version[jnp.clip(new_hid, 0)])
@@ -162,3 +175,184 @@ def apply_wavp(state: IndexState, acc_ids, acc_hit, sp: SearchParams,
 def miss_rate(stats: Stats) -> float:
     a = max(int(stats.accesses), 1)
     return float(stats.misses) / a
+
+
+# ---------------------------------------------------------------------------
+# Host-side placement for the tiered (disk-backed) engine
+# ---------------------------------------------------------------------------
+
+class CacheView(NamedTuple):
+    """Immutable (h2d, vectors) pair readers resolve device hits against.
+    Published as ONE attribute store so a concurrent placement pass can
+    never pair an old mapping with new payloads (torn read)."""
+    h2d: np.ndarray
+    vectors: np.ndarray
+
+
+class HostPlacement:
+    """Numpy mirror of CacheState + Stats for the three-tier engine.
+
+    When the capacity tier lives behind a ``TieredStore`` the placement
+    pass cannot run inside jit (promoted payloads may need a disk read),
+    so the engine keeps the bandwidth-tier bookkeeping in host arrays and
+    runs Algorithm 2 here with identical semantics to ``apply_wavp``.
+    Readers (search threads) take ``self.view`` once — a single immutable
+    snapshot — without the engine's cache lock; the update pass builds
+    fresh arrays and publishes them through one ``view`` assignment, so a
+    concurrent reader sees a consistent (possibly one-batch stale) pair.
+    """
+
+    def __init__(self, n_ids: int, n_slots: int, dim: int, *, theta=1.0,
+                 alpha=1.0, beta=1.0, dtype=np.float32):
+        self.vectors = np.zeros((n_slots, dim), dtype)
+        self.slot_hid = np.full((n_slots,), -1, np.int32)
+        self.h2d = np.full((n_ids,), -1, np.int32)
+        self.ref = np.zeros((n_slots,), np.int8)
+        self.slot_ver = np.zeros((n_slots,), np.int32)
+        self.f_recent = np.zeros((n_ids,), np.float32)
+        self.theta = float(theta)
+        self.alpha = float(alpha)
+        self.beta = float(beta)
+        self.counters = {f: 0 for f in Stats._fields}
+        self.view = CacheView(self.h2d, self.vectors)
+
+    @property
+    def n_slots(self) -> int:
+        return self.vectors.shape[0]
+
+    def scores(self, e_in):
+        return f_lambda_np(self.f_recent, e_in, self.alpha, self.beta)
+
+    def warm(self, ids, vectors):
+        """Cold-start preload (paper §4.4): fill slots [0, len(ids))."""
+        m = min(len(ids), self.n_slots)
+        sl = np.arange(m, dtype=np.int32)
+        self.vectors[sl] = np.asarray(vectors[:m], self.vectors.dtype)
+        self.slot_hid[sl] = np.asarray(ids[:m], np.int32)
+        self.h2d[np.asarray(ids[:m])] = sl
+        self.view = CacheView(self.h2d, self.vectors)
+
+    def to_cache_state(self) -> CacheState:
+        """Materialize the jit-side CacheState view (for engine.state)."""
+        return CacheState(
+            vectors=jnp.asarray(self.vectors),
+            slot_hid=jnp.asarray(self.slot_hid),
+            h2d=jnp.asarray(self.h2d),
+            ref=jnp.asarray(self.ref),
+            slot_ver=jnp.asarray(self.slot_ver),
+            f_recent=jnp.asarray(self.f_recent),
+            theta=jnp.asarray(self.theta, jnp.float32),
+            alpha=jnp.asarray(self.alpha, jnp.float32),
+            beta=jnp.asarray(self.beta, jnp.float32),
+        )
+
+    def to_stats(self) -> Stats:
+        return Stats(*(jnp.asarray(self.counters[f], jnp.int32)
+                       for f in Stats._fields))
+
+
+def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
+                    *, alive, e_in, fetch_vectors, now=0) -> None:
+    """Post-batch placement (Algorithm 2) over host mirrors — the tiered
+    twin of ``apply_wavp`` with the same decision rules.
+
+    acc_ids/acc_hit: [B, I*R] accessed ids (-1 pad) and device-hit flags.
+    alive/e_in: host graph metadata arrays. fetch_vectors(ids) resolves
+    promoted payloads through the cascading host-window/disk lookup.
+    """
+    N = hp.h2d.shape[0]
+    M = hp.n_slots
+    ids = np.asarray(acc_ids).reshape(-1)
+    hit = np.asarray(acc_hit).reshape(-1)
+    valid = ids >= 0
+
+    counts = np.zeros((N,), np.float32)
+    np.add.at(counts, ids[valid], 1.0)
+    miss_counts = np.zeros((N,), np.float32)
+    np.add.at(miss_counts, ids[valid & ~hit], 1.0)
+
+    if sp.policy == "lru":
+        f_recent = np.where(counts > 0, np.float32(now) + 1.0, hp.f_recent)
+    else:
+        decay = np.float32(1.0 if sp.policy == "lfu" else sp.decay)
+        f_recent = hp.f_recent * decay + counts
+    hp.f_recent = f_recent.astype(np.float32)
+
+    n_acc = int(valid.sum())
+    n_hit = int((valid & hit).sum())
+    c = hp.counters
+    c["accesses"] += n_acc
+    c["hits"] += n_hit
+    c["misses"] += n_acc - n_hit
+
+    if sp.policy == "never":
+        c["cpu_computed"] += n_acc - n_hit
+        return
+
+    if sp.policy in ("wavp", "always"):
+        score = hp.scores(e_in)
+    else:
+        score = hp.f_recent
+
+    thr = hp.theta if sp.policy == "wavp" else -np.inf
+    cand_mask = (miss_counts > 0) & (hp.h2d < 0) & np.asarray(alive, bool) \
+        & (score > thr)
+    cand_ids = np.where(cand_mask)[0]
+    P = min(sp.max_promote, M, cand_ids.size)
+    n_prom = n_evict = 0
+    # copy-on-write: concurrent search threads resolve hits through
+    # hp.view, so mutations land on fresh copies published in one
+    # ``view`` assignment (stale-by-one-batch reads fine, torn reads not)
+    h2d, slot_hid = hp.h2d.copy(), hp.slot_hid.copy()
+    vectors, slot_ver = hp.vectors, hp.slot_ver
+    vslot = np.empty((0,), np.int64)
+    if P > 0:
+        top = cand_ids[np.argpartition(-score[cand_ids], P - 1)[:P]]
+        top = top[np.argsort(-score[top])]
+        prom_score = score[top]
+
+        occ = hp.slot_hid >= 0
+        occ_score = np.where(occ, score[np.clip(hp.slot_hid, 0, None)],
+                             -np.inf)
+        protected = (hp.ref > 0) & occ
+        evict_key = np.where(~occ, -np.inf,
+                             np.where(protected, np.inf, occ_score))
+        victims = np.argsort(evict_key, kind="stable")[:P]
+        improves = ~protected[victims] & (
+            (evict_key[victims] < prom_score) | ~occ[victims])
+
+        vslot = victims[improves]
+        new_hid = top[improves]
+        old_hid = hp.slot_hid[vslot]
+        evicted = old_hid[old_hid >= 0]
+        vectors, slot_ver = hp.vectors.copy(), hp.slot_ver.copy()
+        h2d[evicted] = -1
+        payload = np.asarray(fetch_vectors(new_hid), vectors.dtype)
+        vectors[vslot] = payload
+        slot_hid[vslot] = new_hid.astype(np.int32)
+        h2d[new_hid] = vslot.astype(np.int32)
+        slot_ver[vslot] = 0
+        n_prom = int(improves.sum())
+        n_evict = int(evicted.size)
+
+    # clock ref refresh EVERY batch, promotions or not (same as the jit
+    # twin): hits this batch + fresh entries get a second chance
+    ref = np.zeros((M,), np.int8)
+    hit_ids = ids[valid & hit]
+    hit_slots = h2d[hit_ids]
+    ref[hit_slots[hit_slots >= 0]] = 1
+    ref[vslot] = 1
+    hp.vectors, hp.slot_hid, hp.h2d = vectors, slot_hid, h2d
+    hp.slot_ver, hp.ref = slot_ver, ref
+    hp.view = CacheView(h2d, vectors)
+
+    if sp.policy == "wavp":
+        mr = (n_acc - n_hit) / max(n_acc, 1)
+        mean_f = (float(score[cand_mask].sum()) / max(int(cand_mask.sum()), 1))
+        hp.theta = float(np.clip(hp.theta * 0.95 + 0.05 * mr * mean_f,
+                                 1e-3, 1e6))
+
+    c["promotions"] += n_prom
+    c["evictions"] += n_evict
+    c["transfers"] += n_prom
+    c["cpu_computed"] += (n_acc - n_hit) - n_prom

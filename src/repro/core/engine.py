@@ -51,10 +51,33 @@ class EngineConfig:
     sync: bool = True
     stale_refresh: int = 64              # ops between refreshes when !sync
     seed: int = 0
+    # -- disk tier (paper Fig. 11; three-tier mode when disk_path is set) --
+    disk_path: Optional[str] = None      # directory for the memmap tier
+    disk_capacity: int = 0               # id-space of the disk tier
+    #                                      (0 -> capacity)
+    host_window: int = 0                 # host-window slots (0 -> cap // 4)
+    prefetch: bool = True                # async frontier prefetcher
+    prefetch_budget: int = 32            # ids enqueued per search iteration
 
 
 class SVFusionEngine:
-    """Thread-safe streaming SANNS engine over the functional core."""
+    """Thread-safe streaming SANNS engine over the functional core.
+
+    Two serving modes share one interface:
+
+    * **device mode** (default): the capacity tier is the in-memory
+      ``GraphState``; search/insert run as jitted transforms.
+    * **three-tier mode** (``cfg.disk_path`` set): the capacity tier is a
+      ``TieredStore`` host window over disk memmaps. Searches cascade
+      device cache → host window → disk; the host owns the traversal, the
+      device runs the per-expansion distance batches, and predicted-hot
+      frontiers are enqueued to the async prefetcher so disk reads overlap
+      with device compute. WAVP's F_λ drives both device-cache promotion
+      and host-window demotion order. Localized repair is subsumed by the
+      streaming consolidation pass (which also runs on the update stream
+      rather than an MVCC snapshot — deletion-heavy maintenance blocks
+      updates, never searches).
+    """
 
     def __init__(self, init_vectors, cfg: EngineConfig):
         self.cfg = cfg
@@ -62,12 +85,20 @@ class SVFusionEngine:
         self._state_lock = threading.RLock()   # publish/subscribe
         self._update_lock = threading.Lock()   # serializes the update stream
         self._cache_lock = threading.Lock()
-        self._state = build_index(
-            np.asarray(init_vectors, np.float32), degree=cfg.degree,
-            cache_slots=cfg.cache_slots, n_max=cfg.capacity)
+        self._backend = None                   # TieredBackend in 3-tier mode
+        self._placement = None                 # HostPlacement in 3-tier mode
+        self._rng = np.random.default_rng(cfg.seed)
+        init_vectors = np.asarray(init_vectors, np.float32)
+        if cfg.disk_path:
+            self._init_tiered(init_vectors, cfg)
+        else:
+            self._state = build_index(
+                init_vectors, degree=cfg.degree,
+                cache_slots=cfg.cache_slots, n_max=cfg.capacity)
         self._stale_state = self._state
         self._ops_since_refresh = 0
         self._update_batches = 0
+        self._batches_since_repair = 0
         self._consolidations = 0
         self._active_versions = 0
         self._rev_logs: list = []
@@ -75,6 +106,34 @@ class SVFusionEngine:
         self._bg_threads: list = []
         self.latencies: dict[str, list] = {"search": [], "insert": [],
                                            "delete": []}
+
+    def _init_tiered(self, init_vectors, cfg: EngineConfig):
+        from repro.core.build import build_tiered_backend
+        from repro.core.types import init_graph_state, init_stats
+        if len(init_vectors) < 2 * cfg.degree:
+            raise ValueError("three-tier mode needs >= 2*degree seed "
+                             "vectors to bootstrap the graph")
+        n, dim = init_vectors.shape
+        cap = cfg.disk_capacity or cfg.capacity
+        self._backend = build_tiered_backend(
+            init_vectors, cfg.degree, cfg.disk_path, disk_capacity=cap,
+            host_window=cfg.host_window, seed=cfg.seed)
+        self._placement = Cache.HostPlacement(cap, cfg.cache_slots, dim)
+        # cold-start warm-up (paper §4.4): preload top-E_in rows
+        warm_n = min(cfg.cache_slots, n)
+        score = np.where(self._backend.alive[:n],
+                         self._backend.e_in[:n], -1)
+        top = np.argsort(-score, kind="stable")[:warm_n]
+        vecs, _ = self._backend.store.peek(top)
+        self._placement.warm(top, vecs)
+        # graph is a 1-row stub: in tiered mode the capacity tier lives
+        # behind the store, and any device-path use fails loudly
+        self._state = IndexState(
+            graph=init_graph_state(1, dim, cfg.degree),
+            cache=self._placement.to_cache_state(),
+            stats=init_stats(), tiered=self._backend)
+        if cfg.prefetch:
+            self._backend.store.start_prefetcher()
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -102,6 +161,8 @@ class SVFusionEngine:
     def search(self, queries, update_cache=True):
         """Batched search. Returns (ids, dists) as numpy. Batches are padded
         to power-of-two buckets to bound the number of jit specializations."""
+        if self._backend is not None:
+            return self._search_tiered(queries, update_cache)
         t0 = time.perf_counter()
         st = self._read_state()
         queries = jnp.asarray(queries, jnp.float32)
@@ -122,13 +183,37 @@ class SVFusionEngine:
             # tier is shared; graph fields pass through untouched)
             with self._state_lock:
                 cur = self._state
-                new = Cache.apply_wavp(cur._replace(cache=cur.cache),
-                                       res.acc_ids, res.acc_hit,
+                new = Cache.apply_wavp(cur, res.acc_ids, res.acc_hit,
                                        self.cfg.search,
                                        now=self._update_batches)
                 self._state = cur._replace(cache=new.cache, stats=new.stats)
         self.latencies["search"].append(time.perf_counter() - t0)
         return ids, np.asarray(res.dists)
+
+    def _search_tiered(self, queries, update_cache=True):
+        """Three-tier search: cascading lookup + post-batch host placement."""
+        from repro.core.search import search_tiered
+        t0 = time.perf_counter()
+        with self._cache_lock:
+            seed = int(self._rng.integers(0, 2 ** 31 - 1))
+        backend = self._backend
+        f_lam = self._placement.scores(backend.e_in)   # one O(N) pass/batch
+        res = search_tiered(
+            self._backend, self._placement, queries, seed, self.cfg.search,
+            f_lam=f_lam,
+            prefetch_budget=(self.cfg.prefetch_budget if self.cfg.prefetch
+                             else 0))
+        if update_cache:
+            with self._cache_lock:
+                Cache.apply_wavp_host(
+                    self._placement, res.acc_ids, res.acc_hit,
+                    self.cfg.search, alive=backend.alive,
+                    e_in=backend.e_in,
+                    fetch_vectors=lambda i: backend.store.fetch(
+                        i, f_lam, count=False)[0],
+                    now=self._update_batches)
+        self.latencies["search"].append(time.perf_counter() - t0)
+        return res.ids, res.dists
 
     def insert(self, vectors, chunk=512):
         """Insert vectors (chunked so each chunk links into the graph the
@@ -139,7 +224,18 @@ class SVFusionEngine:
         out = []
         with self._update_lock:
             for s in range(0, len(vectors), chunk):
-                part = jnp.asarray(vectors[s:s + chunk])
+                part_np = vectors[s:s + chunk]
+                if self._backend is not None:
+                    with self._cache_lock:
+                        seed = int(self._rng.integers(0, 2 ** 31 - 1))
+                    ids = update.insert_tiered(
+                        self._backend, self._placement, part_np,
+                        self.cfg.search, seed)
+                    self._update_batches += 1
+                    self._batches_since_repair += 1
+                    out.append(np.asarray(ids))
+                    continue
+                part = jnp.asarray(part_np)
                 st = self._state
                 if int(st.graph.alive.sum()) < 2 * self.cfg.degree:
                     st2, ids = self._bootstrap_insert(st, part)
@@ -151,6 +247,7 @@ class SVFusionEngine:
                     self._rev_logs.append(rev)
                 self._publish(st2)
                 self._update_batches += 1
+                self._batches_since_repair += 1
                 out.append(np.asarray(ids))
         self._maybe_maintain()
         self.latencies["insert"].append(time.perf_counter() - t0)
@@ -183,27 +280,60 @@ class SVFusionEngine:
     def delete(self, ids):
         t0 = time.perf_counter()
         with self._update_lock:
-            st2 = update.delete_batch(self._state,
-                                      jnp.asarray(ids, jnp.int32))
-            self._publish(st2)
+            if self._backend is not None:
+                ids_np = np.asarray(ids, np.int64)
+                # bounds-filter BEFORE any fancy index (out-of-range ids
+                # are ignored, matching delete_batch's clip semantics)
+                ids_np = ids_np[(ids_np >= 0) & (ids_np < self._backend.n)]
+                ids_np = ids_np[self._backend.alive[ids_np]]
+                self._backend.alive[ids_np] = False
+                self._backend.version[ids_np] += 1
+            else:
+                st2 = update.delete_batch(self._state,
+                                          jnp.asarray(ids, jnp.int32))
+                self._publish(st2)
             self._update_batches += 1
+            self._batches_since_repair += 1
         self._maybe_maintain()
         self.latencies["delete"].append(time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     def _maybe_maintain(self):
-        if self._update_batches % self.cfg.repair_every == 0:
-            with self._update_lock:
-                st, nrep = update.repair_affected(
-                    self._state, max_repair=self.cfg.repair_budget,
-                    threshold=self.cfg.repair_threshold)
-                self._publish(st)
-        frac = float(update.deleted_fraction(self._state.graph))
+        """Deletion-triggered maintenance (paper §5.2). Repair fires once
+        per ``repair_every`` update batches (counted since the last scan,
+        not by a modulo that triggers on the very first batch); the
+        deleted fraction is read from a state snapshot taken under the
+        lock. Tiered mode has no localized-repair stage — the streaming
+        consolidation covers it."""
+        with self._update_lock:
+            due = self._batches_since_repair >= self.cfg.repair_every
+            if due:
+                self._batches_since_repair = 0
+                if self._backend is None:
+                    with self._state_lock:
+                        st = self._state
+                    st, nrep = update.repair_affected(
+                        st, max_repair=self.cfg.repair_budget,
+                        threshold=self.cfg.repair_threshold)
+                    # repair only touches the graph: publish that field
+                    # alone so cache/stats updates from searches that ran
+                    # during the scan are not rolled back
+                    with self._state_lock:
+                        self._state = self._state._replace(graph=st.graph)
+        if self._backend is not None:
+            frac = self._backend.deleted_fraction()
+        else:
+            with self._state_lock:
+                graph = self._state.graph
+            frac = float(update.deleted_fraction(graph))
         if frac >= self.cfg.consolidate_threshold:
             self.consolidate_async()
 
     def consolidate_async(self, wait=False):
-        """Background global consolidation on an MVCC snapshot."""
+        """Background global consolidation on an MVCC snapshot (device
+        mode) or streamed over the disk tier (tiered mode)."""
+        if self._backend is not None:
+            return self._consolidate_tiered_async(wait)
         with self._state_lock:
             if self._snapshot_n is not None:
                 return None  # a version is already in flight: defer
@@ -236,6 +366,28 @@ class SVFusionEngine:
             th.join()
         return th
 
+    def _consolidate_tiered_async(self, wait=False):
+        with self._state_lock:
+            if self._active_versions >= 1:
+                return None  # one streaming pass at a time
+            self._active_versions += 1
+
+        def work():
+            try:
+                with self._update_lock:
+                    update.consolidate_tiered(self._backend)
+            finally:
+                with self._state_lock:
+                    self._active_versions -= 1
+                    self._consolidations += 1
+
+        th = threading.Thread(target=work, daemon=True)
+        th.start()
+        self._bg_threads.append(th)
+        if wait:
+            th.join()
+        return th
+
     def wait_background(self):
         for th in self._bg_threads:
             th.join()
@@ -245,25 +397,49 @@ class SVFusionEngine:
     @property
     def state(self) -> IndexState:
         with self._state_lock:
-            return self._state
+            st = self._state
+        if self._backend is not None:
+            # tiered mode: the jit-side cache/stats view is materialized
+            # on demand from the host mirrors
+            with self._cache_lock:
+                st = st._replace(cache=self._placement.to_cache_state(),
+                                 stats=self._placement.to_stats())
+            with self._state_lock:
+                self._state = st
+        return st
 
     def stats(self) -> dict:
-        s = self.state.stats
+        st = self.state
+        s = st.stats
         d = {k: int(v) for k, v in s._asdict().items()}
         d["miss_rate"] = Cache.miss_rate(s)
-        d["n"] = int(self.state.graph.n)
-        d["alive"] = int(self.state.graph.alive.sum())
+        if self._backend is not None:
+            d["n"] = int(self._backend.n)
+            d["alive"] = int(self._backend.alive[:self._backend.n].sum())
+            d.update(self._backend.tier_counts())
+            dim = self._backend.dim
+        else:
+            d["n"] = int(st.graph.n)
+            d["alive"] = int(st.graph.alive.sum())
+            dim = st.graph.vectors.shape[1]
         d["consolidations"] = self._consolidations
         # modeled per-access time on v5e (DESIGN.md §2): this machine has
         # one physical tier, so tier economics are reported via the
         # calibrated cost model applied to observed hit/miss/transfer counts
         from repro.core.calibrate import v5e_constants
-        cm = v5e_constants(self.state.graph.vectors.shape[1])
+        cm = v5e_constants(dim)
         acc = max(d["accesses"], 1)
         modeled = (d["hits"] * cm.t_fast + d["cpu_computed"] * cm.t_slow
                    + d["transfers"] * cm.t_transfer)
         d["modeled_us_per_access"] = modeled / acc * 1e6
         return d
+
+    def close(self):
+        """Stop background machinery and flush the disk tier (no-op in
+        device mode)."""
+        self.wait_background()
+        if self._backend is not None:
+            self._backend.close()
 
 
 class MultiStreamRunner:

@@ -18,6 +18,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import CacheState, GraphState, IndexState, SearchParams
 
@@ -120,6 +121,157 @@ def search_batch(state: IndexState, queries, key, sp: SearchParams
     res = jax.vmap(lambda q, e: _search_one(state.graph, state.cache, q, e, sp)
                    )(queries.astype(jnp.float32), entries)
     return res
+
+
+# ---------------------------------------------------------------------------
+# Three-tier search: CPU traversal + disk IO, device distance compute
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _batch_sqdist(x, q):
+    """[B, R, D] gathered rows vs [B, D] queries -> [B, R] fp32 distances.
+    One fixed-shape jitted GEMV per expansion — the device-compute arm the
+    async prefetcher overlaps disk reads against (paper §4.4)."""
+    diff = x - q[:, None, :]
+    return jnp.einsum("brd,brd->br", diff, diff,
+                      preferred_element_type=jnp.float32)
+
+
+def dedup_mask(a):
+    """Per-row duplicate flags for an int array [B, C] (any one occurrence
+    survives). Shared by the tiered search/update paths."""
+    order = np.argsort(a, axis=1, kind="stable")
+    srt = np.take_along_axis(a, order, axis=1)
+    dup_sorted = np.concatenate(
+        [np.zeros((a.shape[0], 1), bool), srt[:, 1:] == srt[:, :-1]], axis=1)
+    dup = np.empty_like(dup_sorted)
+    np.put_along_axis(dup, order, dup_sorted, axis=1)
+    return dup
+
+
+class TieredSearchResult(NamedTuple):
+    ids: np.ndarray       # [B, k]
+    dists: np.ndarray     # [B, k]
+    acc_ids: np.ndarray   # [B, I*R] accessed vertex ids (-1 pad)
+    acc_hit: np.ndarray   # [B, I*R] device-cache-hit flags
+    iters: int
+
+
+def _cascade_vectors(ids_flat, h2d, cache_vec, store, f_lam):
+    """Resolve vectors for a flat id batch through the hierarchy:
+    device cache (mirror) -> host window -> disk. Returns (vectors
+    [n, D] fp32, device_hit [n] bool). Invalid ids (<0) read row 0 of
+    whatever tier and must be masked by the caller."""
+    cid = np.clip(ids_flat, 0, None)
+    slot = h2d[cid]
+    dev_hit = (slot >= 0) & (ids_flat >= 0)
+    vec = np.zeros((len(ids_flat), store.disk.dim), np.float32)
+    if dev_hit.any():
+        vec[dev_hit] = cache_vec[slot[dev_hit]]
+    rest = ~dev_hit & (ids_flat >= 0)   # pad lanes never reach the store
+    if rest.any():
+        uniq, inv = np.unique(cid[rest], return_inverse=True)
+        uv, _ = store.fetch(uniq, f_lam)
+        vec[rest] = uv[inv]
+    return vec, dev_hit
+
+
+def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
+                  *, f_lam=None,
+                  prefetch_budget: int = 0) -> TieredSearchResult:
+    """Greedy beam search over a disk-backed graph (paper Algorithm 1 in
+    its GPU-CPU-disk form). The host owns the traversal and residency, the
+    device evaluates distances batch-at-a-time; every vector read cascades
+    device cache -> host window -> disk, and (optionally) the predicted
+    next frontier is enqueued to the store's async prefetcher ranked by
+    F_λ so disk latency hides behind the next distance batch.
+
+    backend: ``tiers.TieredBackend``; cache_mirror: ``cache.HostPlacement``
+    (readers snapshot its arrays once, see HostPlacement docs).
+    """
+    store = backend.store
+    alive = backend.alive
+    # ONE snapshot read: h2d and vectors must come from the same publish
+    # (see cache.CacheView) or a concurrent placement pass could pair an
+    # old mapping with new payloads
+    view = cache_mirror.view
+    h2d, cache_vec = view.h2d, view.vectors
+    if f_lam is None:   # callers doing several passes precompute O(N) once
+        f_lam = cache_mirror.scores(backend.e_in)
+
+    queries = np.asarray(queries, np.float32)
+    B, D = queries.shape
+    L, R, I, k = sp.pool, backend.degree, sp.max_iters, sp.k
+    n = max(backend.n, 1)
+    rng = np.random.default_rng(seed)
+    qj = jnp.asarray(queries)
+
+    # entry pool: random entries (paper §4.2 — no seed maintenance)
+    pool_ids = rng.integers(0, n, (B, L))
+    ev, _ = _cascade_vectors(pool_ids.reshape(-1), h2d, cache_vec, store,
+                             f_lam)
+    pool_d = np.array(_batch_sqdist(jnp.asarray(ev.reshape(B, L, D)), qj))
+    pool_d[~alive[pool_ids]] = np.inf
+    pool_d[dedup_mask(pool_ids)] = np.inf   # dedup random entries
+    o = np.argsort(pool_d, axis=1, kind="stable")
+    pool_ids = np.take_along_axis(pool_ids, o, axis=1)
+    pool_d = np.take_along_axis(pool_d, o, axis=1)
+    visited = np.zeros((B, L), bool)
+
+    acc_ids = np.full((B, I, R), -1, np.int32)
+    acc_hit = np.zeros((B, I, R), bool)
+    lanes = np.arange(B)
+    it = 0
+    for it in range(I):
+        sel = np.where(visited | ~np.isfinite(pool_d), np.inf, pool_d)
+        best = np.argmin(sel, axis=1)
+        active = np.isfinite(sel[lanes, best])
+        if not active.any():
+            break
+        curr = np.where(active, pool_ids[lanes, best], -1)
+        visited[lanes[active], best[active]] = True
+
+        # frontier rows come from the capacity tier (topology lives on
+        # host/disk only; the device cache stores vectors)
+        ucur = np.unique(curr[active])
+        _, urows = store.fetch(ucur, f_lam)
+        lut = {int(v): i for i, v in enumerate(ucur)}
+        nb = np.full((B, R), -1, np.int32)
+        nb[active] = urows[[lut[int(v)] for v in curr[active]]]
+
+        valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
+        xv, dev_hit = _cascade_vectors(nb.reshape(-1), h2d, cache_vec,
+                                       store, f_lam)
+        d = np.asarray(_batch_sqdist(jnp.asarray(xv.reshape(B, R, D)), qj))
+        in_pool = (nb[:, :, None] == pool_ids[:, None, :]).any(-1)
+        d = np.where(valid & ~in_pool, d, np.inf)
+
+        acc_ids[:, it] = np.where(valid, nb, -1)
+        acc_hit[:, it] = dev_hit.reshape(B, R) & valid
+
+        all_ids = np.concatenate([pool_ids, nb], axis=1)
+        all_d = np.concatenate([pool_d, d], axis=1)
+        all_vis = np.concatenate([visited, np.zeros((B, R), bool)], axis=1)
+        keep = np.argsort(all_d, axis=1, kind="stable")[:, :L]
+        pool_ids = np.take_along_axis(all_ids, keep, axis=1)
+        pool_d = np.take_along_axis(all_d, keep, axis=1)
+        visited = np.take_along_axis(all_vis, keep, axis=1)
+
+        if prefetch_budget > 0:
+            # predicted next frontier: best unvisited candidates; enqueue
+            # the hottest (top-F_λ) non-resident ones so their rows reach
+            # the host window while the next distance batch computes
+            head = pool_ids[:, :4].reshape(-1)
+            head = head[head >= 0]
+            cand = np.unique(head[store.loc[head] < 0])
+            if cand.size:
+                hot = cand[np.argsort(-f_lam[cand])][:prefetch_budget]
+                store.prefetch(hot, f_lam)
+
+    topk_ids = np.where(np.isfinite(pool_d[:, :k]), pool_ids[:, :k], -1)
+    return TieredSearchResult(topk_ids.astype(np.int32), pool_d[:, :k],
+                              acc_ids.reshape(B, -1),
+                              acc_hit.reshape(B, -1), it + 1)
 
 
 def brute_force_topk(graph: GraphState, queries, k):

@@ -2,8 +2,22 @@
 
 The disk tier holds vectors + graph rows in the same layout as the host
 tier via ``np.memmap``; a hash-directory tracks residency and cold vectors
-are demoted by ascending F_λ when the host tier saturates. Async prefetch
-uses a background thread (the paper's cascading-lookup pipeline).
+are demoted by ascending F_λ when the host tier saturates — the SAME
+per-vector F_λ that drives device-cache promotion in ``cache.apply_wavp``
+orders host-window demotion here (paper §4.3, last paragraph). Async
+prefetch uses a background thread (the paper's cascading-lookup pipeline):
+the engine enqueues predicted-hot neighbor frontiers so disk reads overlap
+with device compute (the multi-stream analogue, paper §4.4).
+
+Thread-safety: ``fetch``/``peek``/``write`` serialize on one reentrant
+lock; residency bookkeeping (``loc``/``slot_id``/host arrays) is only
+ever touched under it. The prefetcher performs its disk reads OUTSIDE
+the lock (so background IO genuinely overlaps foreground traffic) and
+re-validates residency + a store write-epoch before installing, dropping
+the batch if a write raced it. Its queue is bounded: under overload new
+predictions are dropped, not accumulated stale. Free slots are handed
+out by a monotone cursor (slots are never returned), so promotion is
+O(batch) instead of a per-miss ``np.where`` scan.
 """
 from __future__ import annotations
 
@@ -30,8 +44,9 @@ class DiskTier:
             self.nbr[:] = -1
         self.capacity, self.dim, self.degree = capacity, dim, degree
 
-    def write(self, ids, vectors, nbrs=None):
-        self.vec[ids] = vectors
+    def write(self, ids, vectors=None, nbrs=None):
+        if vectors is not None:
+            self.vec[ids] = vectors
         if nbrs is not None:
             self.nbr[ids] = nbrs
 
@@ -47,8 +62,7 @@ class TieredStore:
     """Host window over a disk-resident dataset.
 
     Residency directory: ``loc[id] = slot`` into the host window or -1.
-    Demotion policy: lowest-F_λ rows leave the host window first (paper
-    §4.3 last paragraph).
+    Demotion policy: lowest-F_λ residents leave the host window first.
     """
 
     def __init__(self, disk: DiskTier, host_slots: int):
@@ -60,74 +74,215 @@ class TieredStore:
         self.slot_id = np.full((host_slots,), -1, np.int64)     # slot -> id
         self.hits = 0
         self.misses = 0
-        self._prefetch_q: queue.Queue = queue.Queue()
+        self.demotions = 0
+        self.prefetched = 0
+        self.prefetch_dropped = 0
+        self._lock = threading.RLock()
+        self._free_cursor = 0           # slots are allotted once, never freed
+        self._write_epoch = 0           # bumped by write(); guards installs
+        self._prefetch_q: queue.Queue = queue.Queue(maxsize=64)
         self._stop = threading.Event()
         self._th: Optional[threading.Thread] = None
 
     # -- residency ------------------------------------------------------
-    def fetch(self, ids: np.ndarray, f_lambda: Optional[np.ndarray] = None):
+    def fetch(self, ids: np.ndarray, f_lambda: Optional[np.ndarray] = None,
+              *, count: bool = True):
         """Read rows, promoting misses into the host window (demote lowest
-        F_λ residents when full)."""
+        F_λ residents when full). Returns (vectors, nbr_rows) copies."""
         ids = np.asarray(ids)
-        out_v = np.empty((len(ids), self.disk.dim), np.float32)
-        out_n = np.empty((len(ids), self.disk.degree), np.int32)
-        slots = self.loc[ids]
-        hit = slots >= 0
-        self.hits += int(hit.sum())
-        self.misses += int((~hit).sum())
-        out_v[hit] = self.host_vec[slots[hit]]
-        out_n[hit] = self.host_nbr[slots[hit]]
-        miss_ids = ids[~hit]
-        if miss_ids.size:
-            dv, dn = self.disk.read(miss_ids)
-            out_v[~hit] = dv
-            out_n[~hit] = dn
-            self._promote(miss_ids, dv, dn, f_lambda)
-        return out_v, out_n
+        with self._lock:
+            out_v = np.empty((len(ids), self.disk.dim), np.float32)
+            out_n = np.empty((len(ids), self.disk.degree), np.int32)
+            slots = self.loc[ids]
+            hit = slots >= 0
+            if count:
+                self.hits += int(hit.sum())
+                self.misses += int((~hit).sum())
+            out_v[hit] = self.host_vec[slots[hit]]
+            out_n[hit] = self.host_nbr[slots[hit]]
+            miss_ids = ids[~hit]
+            if miss_ids.size:
+                dv, dn = self.disk.read(miss_ids)
+                out_v[~hit] = dv
+                out_n[~hit] = dn
+                self._promote(miss_ids, dv, dn, f_lambda)
+            return out_v, out_n
+
+    def peek(self, ids: np.ndarray):
+        """Read rows through the window overlay WITHOUT promotion or
+        counter updates (maintenance scans must not thrash the window)."""
+        ids = np.asarray(ids)
+        with self._lock:
+            out_v = np.empty((len(ids), self.disk.dim), np.float32)
+            out_n = np.empty((len(ids), self.disk.degree), np.int32)
+            slots = self.loc[ids]
+            hit = slots >= 0
+            out_v[hit] = self.host_vec[slots[hit]]
+            out_n[hit] = self.host_nbr[slots[hit]]
+            if (~hit).any():
+                dv, dn = self.disk.read(ids[~hit])
+                out_v[~hit] = dv
+                out_n[~hit] = dn
+            return out_v, out_n
+
+    def write(self, ids, vectors=None, nbrs=None):
+        """Write-through update: disk always, host window where resident
+        (keeps the overlay coherent without dirty tracking; demotion
+        write-back then never loses updates)."""
+        ids = np.asarray(ids)
+        with self._lock:
+            self._write_epoch += 1
+            self.disk.write(ids, vectors, nbrs)
+            slots = self.loc[ids]
+            res = slots >= 0
+            if res.any():
+                if vectors is not None:
+                    self.host_vec[slots[res]] = np.asarray(vectors)[res]
+                if nbrs is not None:
+                    self.host_nbr[slots[res]] = np.asarray(nbrs)[res]
 
     def _promote(self, ids, vecs, nbrs, f_lambda):
-        for i, vid in enumerate(ids):
-            if self.loc[vid] >= 0:
-                continue
-            empty = np.where(self.slot_id < 0)[0]
-            if empty.size:
-                s = empty[0]
+        """Install missed rows (already read) into the window. Caller holds
+        the lock; ids may contain duplicates."""
+        uniq, first = np.unique(np.asarray(ids), return_index=True)
+        fresh = self.loc[uniq] < 0
+        uniq, first = uniq[fresh], first[fresh]
+        if uniq.size > self.host_slots:
+            # miss batch alone exceeds the window: admit the hottest subset
+            if f_lambda is not None:
+                keep = np.argsort(
+                    -np.asarray(f_lambda, np.float64)[uniq])[:self.host_slots]
             else:
-                # demote the resident with lowest F_λ
-                if f_lambda is not None:
-                    s = int(np.argmin(f_lambda[self.slot_id]))
-                else:
-                    s = int(np.random.randint(self.host_slots))
-                old = self.slot_id[s]
-                self.disk.write([old], self.host_vec[s:s + 1],
-                                self.host_nbr[s:s + 1])
-                self.loc[old] = -1
-            self.host_vec[s] = vecs[i]
-            self.host_nbr[s] = nbrs[i]
-            self.slot_id[s] = vid
-            self.loc[vid] = s
+                keep = np.arange(self.host_slots)
+            uniq, first = uniq[keep], first[keep]
+        m = uniq.size
+        if not m:
+            return
+        slots = np.empty((m,), np.int64)
+        take = min(m, self.host_slots - self._free_cursor)
+        if take > 0:
+            slots[:take] = np.arange(self._free_cursor,
+                                     self._free_cursor + take)
+            self._free_cursor += take
+        spill = m - take
+        if spill > 0:
+            # demote the lowest-F_λ residents; slots allotted above are
+            # still unpublished (slot_id == -1) and must not be victims
+            res_ids = self.slot_id
+            if f_lambda is not None:
+                key = np.asarray(f_lambda,
+                                 np.float64)[np.clip(res_ids, 0, None)].copy()
+            else:
+                key = np.random.random(self.host_slots)
+            key[res_ids < 0] = np.inf
+            victims = np.argpartition(key, spill - 1)[:spill]
+            old = res_ids[victims]
+            self.disk.write(old, self.host_vec[victims],
+                            self.host_nbr[victims])
+            self.loc[old] = -1
+            self.demotions += int(spill)
+            slots[take:] = victims
+        self.host_vec[slots] = vecs[first]
+        self.host_nbr[slots] = nbrs[first]
+        self.slot_id[slots] = uniq
+        self.loc[uniq] = slots
 
     # -- async prefetch ---------------------------------------------------
     def start_prefetcher(self):
         def work():
             while not self._stop.is_set():
                 try:
-                    ids = self._prefetch_q.get(timeout=0.05)
+                    ids, f_lam = self._prefetch_q.get(timeout=0.05)
                 except queue.Empty:
                     continue
-                self.fetch(ids)
+                self._prefetch_one(np.unique(ids), f_lam)
         self._th = threading.Thread(target=work, daemon=True)
         self._th.start()
 
-    def prefetch(self, ids):
-        self._prefetch_q.put(np.asarray(ids))
+    def _prefetch_one(self, ids, f_lam):
+        """One overlapped prefetch: residency probe under the lock, disk
+        read OUTSIDE it, install re-validated against the write epoch."""
+        with self._lock:
+            miss = ids[self.loc[ids] < 0]
+            epoch = self._write_epoch
+        if not miss.size:
+            return
+        dv, dn = self.disk.read(miss)          # overlaps foreground work
+        with self._lock:
+            if self._write_epoch != epoch:
+                self.prefetch_dropped += len(miss)
+                return                         # a write raced the read
+            still = self.loc[miss] < 0
+            if still.any():
+                self._promote(miss[still], dv[still], dn[still], f_lam)
+                self.prefetched += int(still.sum())
+
+    def prefetch(self, ids, f_lambda: Optional[np.ndarray] = None):
+        try:
+            self._prefetch_q.put_nowait((np.asarray(ids), f_lambda))
+        except queue.Full:
+            self.prefetch_dropped += len(ids)  # overload: drop, don't lag
 
     def stop(self):
         self._stop.set()
         if self._th:
             self._th.join(timeout=2.0)
+            self._th = None
+
+    @property
+    def resident(self) -> int:
+        return int((self.slot_id >= 0).sum())
 
     @property
     def miss_rate(self):
         tot = self.hits + self.misses
         return self.misses / tot if tot else 0.0
+
+
+class TieredBackend:
+    """Disk-backed capacity tier for ``SVFusionEngine``.
+
+    Bundles the TieredStore with the host-resident graph metadata the
+    paper keeps in DRAM directories (alive bitset, in-degrees, versions,
+    high-water mark) — a few bytes per id, vs. D·4 bytes per vector, so
+    the directory fits in memory even when vectors/rows do not.
+    Mutations happen under the engine's update stream; searches read the
+    arrays lock-free (numpy loads of a published array are atomic enough
+    for the approximate structures involved).
+    """
+
+    def __init__(self, store: TieredStore, n: int):
+        cap = store.disk.capacity
+        self.store = store
+        self.n = int(n)
+        self.alive = np.zeros((cap,), bool)
+        self.e_in = np.zeros((cap,), np.int32)
+        self.version = np.zeros((cap,), np.int32)
+
+    @property
+    def capacity(self) -> int:
+        return self.store.disk.capacity
+
+    @property
+    def dim(self) -> int:
+        return self.store.disk.dim
+
+    @property
+    def degree(self) -> int:
+        return self.store.disk.degree
+
+    def deleted_fraction(self) -> float:
+        n = max(self.n, 1)
+        return float((~self.alive[:self.n]).sum()) / n
+
+    def tier_counts(self) -> dict:
+        s = self.store
+        return {"host_hits": s.hits, "disk_reads": s.misses,
+                "host_miss_rate": s.miss_rate, "demotions": s.demotions,
+                "prefetched": s.prefetched,
+                "prefetch_dropped": s.prefetch_dropped,
+                "host_resident": s.resident}
+
+    def close(self):
+        self.store.stop()
+        self.store.disk.flush()

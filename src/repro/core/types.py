@@ -1,19 +1,26 @@
 """Functional state pytrees for the SVFusion index.
 
-Two tiers mirror the paper's architecture (DESIGN.md §2):
+Three tiers mirror the paper's architecture (DESIGN.md §2, paper §4.2):
 
-* ``GraphState`` — the capacity tier (paper: CPU DRAM / disk). Holds every
-  vector, the fixed-out-degree KNN graph, the deletion bitset, in-degrees
+* ``GraphState`` — the in-memory capacity tier (paper: CPU DRAM). Holds
+  vectors, the fixed-out-degree KNN graph, the deletion bitset, in-degrees
   and per-vertex versions.
 * ``CacheState`` — the bandwidth tier (paper: GPU HBM). Holds M ≪ N hot
   vectors, the slot↔host-id mapping table, clock reference bits, the decayed
   recent-access counters and the adaptive promotion threshold θ.
+* ``IndexState.tiered`` — optional disk tier backend (paper: SSD). When
+  set, the capacity tier is a host window over disk memmaps
+  (``repro.core.tiers.TieredBackend``) and the engine resolves misses via
+  the cascading lookup device cache → host window → disk. The backend is a
+  *host-side* object: it is registered as static pytree aux data, so jitted
+  functional-core transforms see only the array fields and rebuild states
+  with ``tiered=None`` — the engine owns re-attaching the backend.
 
 All arrays are fixed-capacity for jit; ``n`` is the high-water mark.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +73,18 @@ class IndexState(NamedTuple):
     graph: GraphState
     cache: CacheState
     stats: Stats
+    tiered: Optional[Any] = None   # TieredBackend (static aux, see below)
+
+
+# The tiered backend is a stateful host object (memmaps, locks, threads):
+# it must never be traced. Registering IndexState explicitly overrides the
+# default NamedTuple flattening and moves ``tiered`` into the treedef so
+# jit sees only (graph, cache, stats). Treedef equality is by backend
+# identity — one engine, one backend, stable jit caches.
+jax.tree_util.register_pytree_node(
+    IndexState,
+    lambda s: ((s.graph, s.cache, s.stats), s.tiered),
+    lambda aux, ch: IndexState(ch[0], ch[1], ch[2], aux))
 
 
 class SearchParams(NamedTuple):

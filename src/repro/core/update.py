@@ -13,9 +13,10 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.build import compute_e_in, rank_based_reorder
-from repro.core.search import _search_one
+from repro.core.search import _search_one, dedup_mask
 from repro.core.types import GraphState, IndexState, SearchParams
 
 INF = jnp.float32(jnp.inf)
@@ -58,7 +59,7 @@ def _reverse_edge_scatter(graph: GraphState, targets, new_ids, dists):
 @partial(jax.jit, static_argnames=("sp",))
 def insert_batch(state: IndexState, new_vecs, key, sp: SearchParams):
     """Insert a batch. Returns (state, new_ids, RevLog)."""
-    graph, cache, stats = state
+    graph, cache, stats = state.graph, state.cache, state.stats
     Bi, D = new_vecs.shape
     new_vecs = new_vecs.astype(jnp.float32)
     ids = graph.n + jnp.arange(Bi, dtype=jnp.int32)
@@ -101,7 +102,7 @@ def delete_batch(state: IndexState, ids):
     """Stage 1 (paper §5.2.1): logical deletion. The bitset is shared by all
     tiers (immediate cross-tier sync); searches/insertions skip marked rows
     transparently."""
-    graph, cache, stats = state
+    graph, cache, stats = state.graph, state.cache, state.stats
     cid = jnp.clip(ids, 0)
     ok = (ids >= 0) & graph.alive[cid]
     alive = graph.alive.at[cid].set(jnp.where(ok, False, graph.alive[cid]))
@@ -132,7 +133,7 @@ def repair_affected(state: IndexState, *, max_repair=256, c=2,
     neighbor p contributes at most ``c`` of its own alive out-neighbors
     (nearest to v) as replacement edges — O(c) per deletion instead of the
     full consolidation O(|N_out(p)|)."""
-    graph, cache, stats = state
+    graph, cache, stats = state.graph, state.cache, state.stats
     frac = affected_fraction(graph)
     score = jnp.where(graph.alive & (frac > threshold), frac, -1.0)
     _, vsel = jax.lax.top_k(score, max_repair)
@@ -179,6 +180,169 @@ def repair_affected(state: IndexState, *, max_repair=256, c=2,
     return IndexState(graph, cache, stats), do.sum()
 
 
+# ---------------------------------------------------------------------------
+# Tiered (disk-backed) update path — numpy twins of the jitted transforms,
+# streaming through the TieredStore so the working set stays bounded.
+# ---------------------------------------------------------------------------
+
+def rank_based_reorder_host(cand_ids, cand_d, cand_rows, degree):
+    """Numpy twin of ``build.rank_based_reorder`` for the tiered path:
+    the candidates' neighbor rows arrive pre-fetched (``cand_rows``
+    [B, C, R]) instead of being gathered from a device-resident table."""
+    B, C = cand_ids.shape
+    eq = (cand_rows[:, :, :, None] == cand_ids[:, None, None, :]).any(axis=2)
+    tri = np.tril(np.ones((C, C), bool), k=-1).T         # j < i mask at [j, i]
+    detours = (eq & tri[None]).sum(axis=1)               # [B, C_i]
+    invalid = cand_ids < 0
+    detours = np.where(invalid, C + 1, detours)
+    rank_d = np.argsort(np.argsort(cand_d, axis=1, kind="stable"),
+                        axis=1, kind="stable")
+    order = np.argsort(detours.astype(np.float64) * 1e6 + rank_d,
+                       axis=1, kind="stable")
+    take = min(degree, C)
+    sel_ids = np.take_along_axis(cand_ids, order[:, :take], axis=1)
+    sel_det = np.take_along_axis(detours, order[:, :take], axis=1)
+    sel = np.where(sel_det > C, -1, sel_ids).astype(np.int32)
+    if take < degree:
+        sel = np.concatenate(
+            [sel, np.full((B, degree - take), -1, np.int32)], axis=1)
+    return sel
+
+
+def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
+    """Batched insertion against the disk-backed capacity tier (paper §5.1
+    over the three-tier hierarchy): candidate search cascades through the
+    store, new rows are written through the host window, and reverse edges
+    are applied to the fetched target rows with the same free-slot /
+    replace-worst / last-writer-wins semantics as ``insert_batch``.
+    Returns the new ids. Caller serializes (engine update stream).
+    """
+    from repro.core.search import search_tiered
+    store = backend.store
+    new_vecs = np.asarray(new_vecs, np.float32)
+    Bi = new_vecs.shape[0]
+    R = backend.degree
+    n0 = backend.n
+    if n0 + Bi > backend.capacity:
+        raise ValueError(f"disk tier full: {n0}+{Bi} > {backend.capacity}")
+    ids = (n0 + np.arange(Bi)).astype(np.int64)
+    # one O(capacity) F_λ pass shared by the candidate search, the row
+    # fetches and the reverse-edge pass below
+    f_lam = cache_mirror.scores(backend.e_in)
+
+    # phase 1: candidate search on the current graph
+    res = search_tiered(backend, cache_mirror, new_vecs, seed,
+                        sp._replace(k=sp.pool), f_lam=f_lam)
+    cand_ids, cand_d = res.ids.astype(np.int64), res.dists
+
+    # phase 2: rank-based reorder over the candidates' (fetched) rows
+    uc = np.unique(np.clip(cand_ids, 0, None))
+    _, urows = store.fetch(uc, f_lam)
+    lut = np.zeros((int(uc.max()) + 2,), np.int64)
+    lut[uc] = np.arange(uc.size)
+    cand_rows = urows[lut[np.clip(cand_ids, 0, None)]]
+    cand_rows[cand_ids < 0] = -1
+    sel = rank_based_reorder_host(cand_ids, cand_d, cand_rows, R)
+
+    # establish new vertices (write-through keeps the overlay coherent)
+    store.write(ids, new_vecs, sel)
+    backend.alive[ids] = True
+    backend.version[ids] = 1
+    np.add.at(backend.e_in, sel[sel >= 0], 1)
+    backend.n = int(n0 + Bi)
+
+    # reverse edges (flattened over the batch, original-rows semantics)
+    flat_t = sel.reshape(-1).astype(np.int64)
+    flat_new = np.repeat(ids, R)
+    ok = flat_t >= 0
+    flat_t, flat_new = flat_t[ok], flat_new[ok]
+    if flat_t.size:
+        ut, inv = np.unique(flat_t, return_inverse=True)
+        tvec, trow = store.fetch(ut, f_lam)
+        rvec, _ = store.peek(np.clip(trow, 0, None).reshape(-1))
+        rvec = rvec.reshape(ut.size, R, -1)
+        nb_d = ((rvec - tvec[:, None, :]) ** 2).sum(-1)          # [U, R]
+        occ = trow >= 0
+        worst = np.argmax(np.where(occ, nb_d, -np.inf), axis=1)
+        has_free = (~occ).any(axis=1)
+        free_idx = np.argmax(~occ, axis=1)
+        slot = np.where(has_free, free_idx, worst)
+        max_d = np.where(occ, nb_d, -np.inf).max(axis=1)
+
+        d_edge = ((tvec[inv] - new_vecs[(flat_new - n0)]) ** 2).sum(-1)
+        improves = has_free[inv] | (d_edge < max_d[inv])
+        new_rows = trow.copy()
+        # later edges overwrite earlier ones at the same (target, slot) —
+        # identical to the jit path's last-writer-wins scatter
+        new_rows[inv[improves], slot[inv][improves]] = \
+            flat_new[improves].astype(np.int32)
+        np.add.at(backend.e_in, trow[trow >= 0], -1)
+        np.add.at(backend.e_in, new_rows[new_rows >= 0], 1)
+        store.write(ut, None, new_rows)
+        backend.version[ut] += 1
+    return ids
+
+
+def consolidate_tiered(backend, chunk=256):
+    """Stage 3 (paper §5.2.2) for the disk tier: global consolidation
+    streamed over bounded chunks. Per alive vertex, the neighbor list is
+    rebuilt from {alive out-neighbors} ∪ {alive out-neighbors of deleted
+    out-neighbors}, pruned to degree by distance; dead rows are cleared.
+    Reads go through ``peek`` so the scan never thrashes the host window;
+    writes go through the store so the overlay stays coherent. The caller
+    (engine) runs this on the update stream — foreground searches keep
+    reading rows lock-free and see the repair progressively.
+    """
+    store = backend.store
+    R = backend.degree
+    alive = backend.alive
+    n = backend.n
+    for s in range(0, n, chunk):
+        ids = np.arange(s, min(s + chunk, n))
+        C = ids.size
+        svec, rows = store.peek(ids)
+        valid = rows >= 0
+        dead = valid & ~alive[np.clip(rows, 0, None)]
+        if not dead.any() and bool(alive[ids].all()):
+            continue
+        hop2 = np.full((C, R, R), -1, np.int32)
+        du = np.unique(rows[dead]) if dead.any() else np.empty(0, np.int64)
+        if du.size:
+            _, drows = store.peek(du)
+            lut = np.zeros((int(du.max()) + 1,), np.int64)
+            lut[du] = np.arange(du.size)
+            hop2[dead] = drows[lut[rows[dead]]]
+        cand = np.concatenate(
+            [np.where(dead, -1, rows), hop2.reshape(C, R * R)], axis=1)
+        okc = (cand >= 0) & alive[np.clip(cand, 0, None)] \
+            & (cand != ids[:, None])
+        cu = np.unique(np.clip(cand, 0, None))
+        cvec, _ = store.peek(cu)
+        clut = np.zeros((int(cu.max()) + 2,), np.int64)
+        clut[cu] = np.arange(cu.size)
+        d = ((cvec[clut[np.clip(cand, 0, None)]]
+              - svec[:, None, :]) ** 2).sum(-1)
+        d = np.where(okc & ~dedup_mask(cand), d, np.inf)
+        top = np.argpartition(d, min(R, d.shape[1]) - 1, axis=1)[:, :R]
+        dtop = np.take_along_axis(d, top, axis=1)
+        o = np.argsort(dtop, axis=1, kind="stable")
+        top = np.take_along_axis(top, o, axis=1)
+        dtop = np.take_along_axis(dtop, o, axis=1)
+        new_rows = np.where(np.isfinite(dtop),
+                            np.take_along_axis(cand, top, axis=1),
+                            -1).astype(np.int32)
+        new_rows[~alive[ids]] = -1
+        store.write(ids, None, new_rows)
+        backend.version[ids] += 1
+    # e_in rebuild: one streaming accumulation pass
+    e_in = np.zeros((backend.capacity,), np.int32)
+    for s in range(0, n, chunk):
+        ids = np.arange(s, min(s + chunk, n))
+        _, rows = store.peek(ids)
+        np.add.at(e_in, rows[rows >= 0], 1)
+    backend.e_in = e_in
+
+
 @partial(jax.jit, static_argnames=("chunk",))
 def consolidate(state: IndexState, *, chunk=512):
     """Stage 3 (paper §5.2.2): global consolidation. For every alive vertex,
@@ -186,7 +350,7 @@ def consolidate(state: IndexState, *, chunk=512):
     out-neighbors of its deleted out-neighbors}, pruned to degree by
     distance. Dead rows are cleared. Runs on a snapshot in the engine
     (MVCC) so foreground ops never block on it."""
-    graph, cache, stats = state
+    graph, cache, stats = state.graph, state.cache, state.stats
     R = graph.degree
     N = graph.capacity
 

@@ -19,18 +19,28 @@ from jax.experimental import pallas as pl
 
 
 def _bitonic(d, i, v):
-    """Full ascending bitonic sort of (d, i, v) rows [B, P], P = 2^m."""
-    P = d.shape[-1]
+    """Full ascending bitonic sort of (d, i, v) rows [B, P], P = 2^m.
+
+    The partner exchange (lane ``j ^ stride``) is a strided reshape +
+    reverse, not a gather: lane j decomposes as (block, bit, offset) with
+    ``bit = (j // stride) & 1``, and XOR-ing the stride flips exactly that
+    axis. XLA compiles this in linear time, where the equivalent
+    take_along_axis network blows up compile superlinearly (and gathers
+    are the slow path on the VPU anyway).
+    """
+    B, P = d.shape
     m = P.bit_length() - 1
+    idx = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
     for stage in range(1, m + 1):
+        up = ((idx >> stage) & 1) == 0              # ascending block?
         for sub in range(stage, 0, -1):
             stride = 1 << (sub - 1)
-            idx = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
-            partner = idx ^ stride
-            pd = jnp.take_along_axis(d, partner, axis=1)
-            pi = jnp.take_along_axis(i, partner, axis=1)
-            pv = jnp.take_along_axis(v, partner, axis=1)
-            up = ((idx >> stage) & 1) == 0          # ascending block?
+
+            def partner(x):
+                y = x.reshape(B, P // (2 * stride), 2, stride)
+                return y[:, :, ::-1, :].reshape(B, P)
+
+            pd, pi, pv = partner(d), partner(i), partner(v)
             is_lo = (idx & stride) == 0
             keep_self = jnp.where(up, (d < pd) | ((d == pd) & (i <= pi)),
                                   (d > pd) | ((d == pd) & (i >= pi)))

@@ -21,6 +21,8 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "fsdp": ("pod", "data"),
@@ -52,7 +54,7 @@ def rules_override(**kw):
 
 
 def mesh_axis_names() -> tuple[str, ...]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return ()
     return tuple(mesh.axis_names)
@@ -98,7 +100,7 @@ def weight_gather(cfg, w, axes):
 
 
 def axis_size(logical: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

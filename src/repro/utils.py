@@ -77,7 +77,8 @@ def spec(*names) -> P:
 
 
 def current_mesh_axis_sizes() -> dict[str, int]:
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro import compat
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return {}
     return dict(zip(mesh.axis_names, mesh.axis_sizes))

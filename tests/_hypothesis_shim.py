@@ -1,0 +1,99 @@
+"""Minimal offline stand-in for the ``hypothesis`` API used by this suite.
+
+The pinned environment has no network route, so ``pip install hypothesis``
+is not an option. This shim implements the tiny subset the tests need —
+``@given`` over ``strategies.integers`` with ``@settings`` — by replaying a
+deterministic, seeded set of drawn examples per strategy. Boundary values
+(min and max of each strategy) are always included, the rest are drawn
+from a generator seeded by the test function's qualified name, so runs are
+reproducible without any dependency.
+
+Test modules import it as::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        from tests._hypothesis_shim import given, settings
+        from tests._hypothesis_shim import strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+# Replay cap: property bodies here jit-compile per distinct shape (a few
+# seconds each for interpret-mode Pallas), so a bounded, deterministic
+# example set keeps the suite practical while still covering both
+# boundaries + a random sample.
+MAX_REPLAY = 8
+
+
+class _Strategy:
+    def __init__(self, draw, boundaries=()):
+        self.draw = draw
+        self.boundaries = tuple(boundaries)
+
+
+class strategies:
+    """Namespace mirror of ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            boundaries=(int(min_value), int(max_value)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            boundaries=(float(min_value), float(max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                         boundaries=(False, True))
+
+
+st = strategies
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    """Records the example budget on the (possibly given-wrapped) function."""
+    def deco(fn):
+        if max_examples is not None:
+            fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            budget = getattr(wrapper, "_hyp_max_examples", MAX_REPLAY)
+            n = min(budget, MAX_REPLAY)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            examples = []
+            # boundary example: every strategy at min, then every at max
+            if strats and all(s.boundaries for s in strats):
+                examples.append(tuple(s.boundaries[0] for s in strats))
+                examples.append(tuple(s.boundaries[-1] for s in strats))
+            while len(examples) < n:
+                examples.append(tuple(s.draw(rng) for s in strats))
+            for ex in examples[:n]:
+                fn(*args, *ex, **kwargs)
+        # hide the strategy-bound trailing params from pytest's fixture
+        # resolution (real hypothesis does the same)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(strats)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,211 @@
+"""Three-tier (GPU-CPU-disk) path tests: cascading lookup through the
+serving engine, TieredStore thread-safety, WAVP-shared demotion order, and
+the bandwidth-tier dtype regression."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core.build import build_graph, build_index
+from repro.core.engine import EngineConfig, SVFusionEngine
+from repro.core.search import brute_force_topk, recall_at_k, search_batch
+from repro.core.tiers import DiskTier, TieredStore
+from repro.core.types import SearchParams
+
+N, D, R = 3000, 24, 16
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(0)
+    return rng.normal(size=(N, D)).astype(np.float32)
+
+
+def make_engine(tmp_path, dataset, host_window=700, **kw):
+    """Disk-backed engine whose dataset is ≥4x the host window."""
+    cfg = EngineConfig(
+        degree=R, cache_slots=256, capacity=8192,
+        disk_path=str(tmp_path / "tier"), disk_capacity=8192,
+        host_window=host_window,
+        search=SearchParams(k=10, pool=64, max_iters=96), **kw)
+    return SVFusionEngine(dataset, cfg)
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end over the disk tier
+# ---------------------------------------------------------------------------
+
+def test_tiered_engine_search_recall(tmp_path, dataset):
+    eng = make_engine(tmp_path, dataset)
+    try:
+        assert N >= 4 * eng.cfg.host_window   # larger-than-window dataset
+        rng = np.random.default_rng(1)
+        q = rng.normal(size=(32, D)).astype(np.float32)
+        ids, dists = eng.search(q)
+        g = build_graph(dataset, R)
+        truth, _ = brute_force_topk(g, jnp.asarray(q), 10)
+        assert float(recall_at_k(jnp.asarray(ids), truth)) > 0.8
+        # distances ascending, per-tier accounting alive
+        assert (np.diff(dists, axis=1) >= -1e-5).all()
+        st = eng.stats()
+        assert st["disk_reads"] > 0 and st["host_hits"] > 0
+        assert st["accesses"] == st["hits"] + st["misses"]
+    finally:
+        eng.close()
+
+
+def test_tiered_engine_insert_delete_consolidate(tmp_path, dataset):
+    eng = make_engine(tmp_path, dataset)
+    try:
+        rng = np.random.default_rng(2)
+        newv = rng.normal(size=(48, D)).astype(np.float32)
+        ids = eng.insert(newv)
+        assert int(eng.stats()["n"]) == N + 48
+        found, _ = eng.search(newv)
+        assert float((found[:, 0] == ids).mean()) > 0.9  # read-after-write
+        # delete the new rows; they must vanish from results
+        eng.delete(ids)
+        found2, _ = eng.search(newv)
+        assert not np.isin(ids, found2).any()
+        # streaming consolidation scrubs dead edges on disk
+        eng.consolidate_async(wait=True)
+        be = eng.state.tiered
+        _, rows = be.store.peek(np.arange(be.n))
+        dead_edges = (rows >= 0) & ~be.alive[np.clip(rows, 0, None)]
+        assert dead_edges.sum() == 0
+        # e_in rebuilt consistently with the on-disk rows
+        e_in = np.zeros((be.capacity,), np.int32)
+        np.add.at(e_in, rows[rows >= 0], 1)
+        np.testing.assert_array_equal(e_in, be.e_in)
+    finally:
+        eng.close()
+
+
+def test_tiered_engine_delete_out_of_range_ignored(tmp_path, dataset):
+    """Out-of-range / already-dead ids are ignored, matching the device
+    path's clip semantics (used to IndexError past disk capacity)."""
+    eng = make_engine(tmp_path, dataset)
+    try:
+        eng.delete(np.array([-5, 0, N + 10, eng.cfg.disk_capacity + 600]))
+        eng.delete(np.array([0]))          # double-delete: no-op
+        assert eng.stats()["alive"] == N - 1
+    finally:
+        eng.close()
+
+
+def test_tiered_engine_prefetch_populates_window(tmp_path, dataset):
+    eng = make_engine(tmp_path, dataset, prefetch=True, prefetch_budget=64)
+    try:
+        rng = np.random.default_rng(3)
+        for _ in range(3):
+            eng.search(rng.normal(size=(16, D)).astype(np.float32))
+        import time
+        time.sleep(0.3)   # let the prefetcher drain
+        assert eng.state.tiered.store.prefetched > 0
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# TieredStore semantics
+# ---------------------------------------------------------------------------
+
+def test_tiered_store_wavp_demotion_order(tmp_path):
+    """Host-window demotion follows ascending F_λ — the same predictor
+    that ranks device-cache promotion (paper §4.3)."""
+    n, dim = 128, 8
+    disk = DiskTier(str(tmp_path), n, dim, 4)
+    data = np.random.default_rng(0).normal(size=(n, dim)).astype(np.float32)
+    disk.write(np.arange(n), data, np.zeros((n, 4), np.int32))
+    store = TieredStore(disk, host_slots=16)
+    f_lam = C.f_lambda_np(np.zeros(n), np.arange(n))  # ascending in id
+    store.fetch(np.arange(16), f_lam)                 # fill the window
+    store.fetch(np.arange(100, 108), f_lam)           # hotter rows arrive
+    # the 8 coldest residents (ids 0..7) were demoted, hottest retained
+    assert (store.loc[np.arange(8)] == -1).all()
+    assert (store.loc[np.arange(8, 16)] >= 0).all()
+    assert (store.loc[np.arange(100, 108)] >= 0).all()
+    assert store.demotions == 8
+
+
+def test_tiered_store_write_through_coherence(tmp_path):
+    n, dim = 64, 4
+    disk = DiskTier(str(tmp_path), n, dim, 4)
+    data = np.zeros((n, dim), np.float32)
+    disk.write(np.arange(n), data, np.full((n, 4), -1, np.int32))
+    store = TieredStore(disk, host_slots=8)
+    store.fetch(np.arange(4))                     # resident
+    upd = np.full((2, dim), 7.0, np.float32)
+    store.write(np.array([1, 50]), upd)           # one resident, one not
+    v, _ = store.fetch(np.array([1, 50]))
+    np.testing.assert_allclose(v, 7.0)
+    # peek must not promote or count
+    h, m = store.hits, store.misses
+    store.peek(np.arange(40, 60))
+    assert (store.hits, store.misses) == (h, m)
+    assert store.loc[55] == -1
+
+
+def test_tiered_store_concurrent_fetch_stress(tmp_path):
+    """Two foreground threads + the background prefetcher hammer an
+    8x-oversubscribed window; residency must stay bijective and contents
+    exact."""
+    n, dim = 512, 16
+    disk = DiskTier(str(tmp_path), n, dim, 4)
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n, dim)).astype(np.float32)
+    disk.write(np.arange(n), data, np.zeros((n, 4), np.int32))
+    store = TieredStore(disk, host_slots=64)
+    store.start_prefetcher()
+    f_lam = rng.random(n)
+    errors = []
+
+    def worker(seed):
+        try:
+            r = np.random.default_rng(seed)
+            for _ in range(150):
+                ids = r.integers(0, n, 48)
+                v, _ = store.fetch(ids, f_lam)
+                np.testing.assert_allclose(v, data[ids], rtol=1e-6)
+                store.prefetch(r.integers(0, n, 16), f_lam)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ths = [threading.Thread(target=worker, args=(s,)) for s in (1, 2)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    store.stop()
+    assert not errors, errors[0]
+    # residency directory is a bijection window<->ids
+    occ = store.slot_id >= 0
+    assert occ.sum() == (store.loc >= 0).sum()
+    np.testing.assert_array_equal(
+        store.loc[store.slot_id[occ]], np.where(occ)[0])
+    # resident rows hold the true contents
+    res_ids = store.slot_id[occ]
+    np.testing.assert_allclose(store.host_vec[store.loc[res_ids]],
+                               data[res_ids], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-tier dtype regression
+# ---------------------------------------------------------------------------
+
+def test_apply_wavp_preserves_cache_dtype():
+    """A bf16 device cache must stay bf16 through a placement pass (the
+    fp32 scatter-pad used to silently double device-cache memory)."""
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(512, D)).astype(np.float32)
+    st = build_index(vecs, degree=8, cache_slots=64, n_max=1024)
+    st = st._replace(cache=st.cache._replace(
+        vectors=st.cache.vectors.astype(jnp.bfloat16)))
+    sp = SearchParams(k=4, pool=32, max_iters=32)
+    res = search_batch(st, jnp.asarray(vecs[:8]), jax.random.PRNGKey(0), sp)
+    st2 = C.apply_wavp(st, res.acc_ids, res.acc_hit, sp)
+    assert st2.cache.vectors.dtype == jnp.bfloat16
+    assert int(st2.stats.promotions) >= 0  # pass ran
