@@ -1,12 +1,14 @@
 # Mechanical pass/fail bar for every PR.
 #
-#   make verify    — the tier-1 suite (ROADMAP.md)
-#   make bench-disk — the three-tier serving benchmark (fig. 11)
+#   make verify      — the tier-1 suite (ROADMAP.md)
+#   make bench-disk  — the three-tier serving benchmark (fig. 11)
+#   make bench-smoke — seconds-scale disk-backed serving bench (CI gate:
+#                      catches serving-path regressions unit tests miss)
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-disk
+.PHONY: verify test bench-disk bench-smoke
 
 verify:
 	$(PY) -m pytest -x -q
@@ -15,3 +17,6 @@ test: verify
 
 bench-disk:
 	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py
+
+bench-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --smoke

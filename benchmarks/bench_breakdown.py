@@ -10,7 +10,7 @@ import numpy as np
 from benchmarks.common import SVFusionAdapter, csv_row
 from repro.core import update as U
 from repro.core.build import build_index, compute_e_in, rank_based_reorder
-from repro.core.search import _search_one
+from repro.core.search import _frontier_search
 from repro.core.types import SearchParams
 
 
@@ -24,9 +24,8 @@ def phase_breakdown(n=5000, dim=32, batch=128, seed=0):
     sp = SearchParams(k=10, pool=64, max_iters=96)
     key = jax.random.PRNGKey(1)
 
-    search_fn = jax.jit(lambda g, c, q, e: jax.vmap(
-        lambda qq, ee: _search_one(g, c, qq, ee, sp._replace(k=sp.pool))
-    )(q, e))
+    search_fn = jax.jit(lambda g, c, q, e: _frontier_search(
+        g, c, q, e, sp._replace(k=sp.pool)))
     entries = jax.random.randint(key, (batch, sp.pool), 0,
                                  int(st.graph.n), dtype=jnp.int32)
 

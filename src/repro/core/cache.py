@@ -55,7 +55,8 @@ def apply_wavp(state: IndexState, acc_ids, acc_hit, sp: SearchParams,
                now=0) -> IndexState:
     """Post-batch placement pass (Algorithm 2, batched).
 
-    acc_ids [B, I*R] accessed ids (-1 pad), acc_hit [B, I*R] hit flags.
+    acc_ids [B, rounds·beam·R] accessed ids (-1 pad) from the frontier
+    executor's round logs, acc_hit [B, rounds·beam·R] hit flags.
     """
     graph, cache, stats = state.graph, state.cache, state.stats
     N = graph.capacity
@@ -256,9 +257,10 @@ def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
     """Post-batch placement (Algorithm 2) over host mirrors — the tiered
     twin of ``apply_wavp`` with the same decision rules.
 
-    acc_ids/acc_hit: [B, I*R] accessed ids (-1 pad) and device-hit flags.
-    alive/e_in: host graph metadata arrays. fetch_vectors(ids) resolves
-    promoted payloads through the cascading host-window/disk lookup.
+    acc_ids/acc_hit: [B, rounds·beam·R] accessed ids (-1 pad) and
+    device-hit flags from the frontier executor's round logs. alive/e_in:
+    host graph metadata arrays. fetch_vectors(ids) resolves promoted
+    payloads through the cascading host-window/disk lookup.
     """
     N = hp.h2d.shape[0]
     M = hp.n_slots

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.search import _search_one
+from repro.core.search import _frontier_search
 from repro.core.types import (CacheState, GraphState, SearchParams,
                               init_cache_state)
 
@@ -116,8 +116,7 @@ def make_distributed_search(mesh, sp: SearchParams,
         keys = jax.random.fold_in(key, shard_lin)
         entries = jax.random.randint(keys, (B, sp.pool), 0, n_local,
                                      dtype=jnp.int32)
-        res = jax.vmap(lambda q, e: _search_one(graph, cache, q, e, sp))(
-            queries, entries)
+        res = _frontier_search(graph, cache, queries, entries, sp)
         gids = jnp.where(res.ids >= 0, res.ids + offset, -1)
 
         # hierarchical top-k merge over the data axes (results, not rows,

@@ -74,9 +74,15 @@ class SVFusionEngine:
       frontiers are enqueued to the async prefetcher so disk reads overlap
       with device compute. WAVP's F_λ drives both device-cache promotion
       and host-window demotion order. Localized repair is subsumed by the
-      streaming consolidation pass (which also runs on the update stream
-      rather than an MVCC snapshot — deletion-heavy maintenance blocks
-      updates, never searches).
+      streaming consolidation pass, which (like device mode) runs on an
+      MVCC snapshot: topology+alive are frozen briefly, rows rebuild in
+      the background, and the merge re-applies the window's reverse-edge
+      log — deletion-heavy maintenance blocks neither updates nor
+      searches.
+
+    Both modes search through the shared hop-batched frontier executor
+    (``core.search``): ``sp.beam`` frontier expansions per round, one
+    jitted gather+distance+topk-merge dispatch per round.
     """
 
     def __init__(self, init_vectors, cfg: EngineConfig):
@@ -103,6 +109,9 @@ class SVFusionEngine:
         self._active_versions = 0
         self._rev_logs: list = []
         self._snapshot_n: Optional[int] = None
+        self._search_rounds = 0        # tiered executor round accounting
+        self._search_dispatches = 0    # device dispatches issued by search
+        self._search_batches = 0
         self._bg_threads: list = []
         self.latencies: dict[str, list] = {"search": [], "insert": [],
                                            "delete": []}
@@ -203,6 +212,10 @@ class SVFusionEngine:
             f_lam=f_lam,
             prefetch_budget=(self.cfg.prefetch_budget if self.cfg.prefetch
                              else 0))
+        with self._cache_lock:    # concurrent search streams share these
+            self._search_rounds += res.iters
+            self._search_dispatches += res.dispatches
+            self._search_batches += 1
         if update_cache:
             with self._cache_lock:
                 Cache.apply_wavp_host(
@@ -228,9 +241,13 @@ class SVFusionEngine:
                 if self._backend is not None:
                     with self._cache_lock:
                         seed = int(self._rng.integers(0, 2 ** 31 - 1))
-                    ids = update.insert_tiered(
+                    ids, rev = update.insert_tiered(
                         self._backend, self._placement, part_np,
                         self.cfg.search, seed)
+                    if self._snapshot_n is not None and len(rev.v):
+                        # consolidation in flight: log the window's
+                        # reverse edges for the MVCC merge
+                        self._rev_logs.append(rev)
                     self._update_batches += 1
                     self._batches_since_repair += 1
                     out.append(np.asarray(ids))
@@ -367,17 +384,37 @@ class SVFusionEngine:
         return th
 
     def _consolidate_tiered_async(self, wait=False):
-        with self._state_lock:
-            if self._active_versions >= 1:
-                return None  # one streaming pass at a time
-            self._active_versions += 1
+        """MVCC-snapshotted tiered consolidation (paper §5.3 ported to the
+        disk tier): freeze topology+alive under the update lock (brief),
+        rebuild rows off-lock while inserts/deletes/searches continue on
+        the active log, then publish via ``mvcc.merge_consolidated_tiered``
+        with the window's reverse-edge log in one short critical section —
+        consolidation blocks neither searches nor updates."""
+        with self._update_lock:
+            with self._state_lock:
+                if self._snapshot_n is not None:
+                    return None  # a version is already in flight: defer
+                if self._active_versions >= self.cfg.max_versions:
+                    return None  # bounded-version policy: defer
+                self._active_versions += 1
+            snap = mvcc.snapshot_tiered(self._backend)
+            with self._state_lock:
+                self._snapshot_n = snap.n
+                self._rev_logs = []
 
         def work():
             try:
-                with self._update_lock:
-                    update.consolidate_tiered(self._backend)
+                new_rows = update.consolidate_tiered(
+                    self._backend, snapshot=snap)
+                with self._update_lock, self._state_lock:
+                    # per-batch logs, replayed in order by the merge
+                    mvcc.merge_consolidated_tiered(
+                        self._backend, snap, new_rows,
+                        list(self._rev_logs))
             finally:
                 with self._state_lock:
+                    self._snapshot_n = None
+                    self._rev_logs = []
                     self._active_versions -= 1
                     self._consolidations += 1
 
@@ -417,6 +454,9 @@ class SVFusionEngine:
             d["n"] = int(self._backend.n)
             d["alive"] = int(self._backend.alive[:self._backend.n].sum())
             d.update(self._backend.tier_counts())
+            nb = max(self._search_batches, 1)
+            d["search_rounds_per_batch"] = self._search_rounds / nb
+            d["search_dispatches_per_batch"] = self._search_dispatches / nb
             dim = self._backend.dim
         else:
             d["n"] = int(st.graph.n)

@@ -14,15 +14,29 @@ At completion the background result G'_t0 is merged:
 
 A bounded-version policy (engine.py) defers new snapshots once the limit is
 reached.
+
+The same protocol is ported to the disk tier (``TieredSnapshot`` /
+``snapshot_tiered`` / ``merge_consolidated_tiered``): the snapshot freezes
+only the per-id metadata that consolidation depends on — adjacency rows
+and the alive bitset, a few bytes per id — while vectors, which are
+immutable per id, keep streaming from the live store. Consolidation
+(``update.consolidate_tiered``) then runs entirely off the update stream:
+inserts/deletes continue on the active log and the merge below publishes
+in one short critical section, so consolidation blocks neither searches
+nor updates.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import GraphState, IndexState
 from repro.core.build import compute_e_in
-from repro.core.update import RevLog, _reverse_edge_scatter
+from repro.core.update import (RevLog, _reverse_edge_scatter,
+                               reverse_edge_rows_host)
 
 
 @jax.jit
@@ -61,3 +75,124 @@ def concat_rev_logs(logs) -> RevLog:
     return RevLog(jnp.concatenate([l.v for l in logs]),
                   jnp.concatenate([l.v_new for l in logs]),
                   jnp.concatenate([l.d for l in logs]))
+
+
+# ---------------------------------------------------------------------------
+# Disk-tier port: snapshot / merge for the streaming consolidation
+# ---------------------------------------------------------------------------
+
+class TieredSnapshot(NamedTuple):
+    """Frozen view of the disk-tier graph metadata at snapshot time.
+    Vectors are immutable per id and deliberately NOT copied."""
+    n: int                # high-water mark at snapshot time
+    rows: np.ndarray      # [n, R] int32 adjacency at snapshot time
+    alive: np.ndarray     # [n] bool alive bitset at snapshot time
+
+
+def snapshot_tiered(backend, chunk=4096) -> TieredSnapshot:
+    """Freeze the topology + alive bitset for a background consolidation.
+    Rows stream through ``peek`` in bounded chunks (no window thrash).
+    Caller serializes with the update stream (one brief lock hold)."""
+    n = backend.n
+    rows = np.empty((n, backend.degree), np.int32)
+    for s in range(0, n, chunk):
+        ids = np.arange(s, min(s + chunk, n))
+        rows[ids] = backend.store.peek_rows(ids)
+    return TieredSnapshot(int(n), rows, backend.alive[:n].copy())
+
+
+def merge_consolidated_tiered(backend, snap: TieredSnapshot, new_rows,
+                              rev_logs, chunk=4096) -> None:
+    """Publish a background tiered consolidation (the disk-tier twin of
+    ``merge_consolidated``): window deletions stay authoritative (dead
+    rows cleared, edges to window-dead vertices scrubbed), window
+    reverse-edge triplets are re-applied onto the consolidated rows with
+    ``insert_batch``'s free-slot / replace-worst / last-writer-wins
+    semantics, vertices inserted after the snapshot (id >= snap.n) keep
+    their active-store rows verbatim, and e_in is rebuilt over the merged
+    graph. ``rev_logs`` is the *sequence* of per-insert-batch RevLogs
+    logged during the window, replayed batch by batch (slots are
+    recomputed between batches, exactly as the live path applied them —
+    one concatenated one-shot replay would collapse every window edge of
+    a target onto a single slot and drop acknowledged edges). Caller
+    serializes with the update stream."""
+    store = backend.store
+    R = backend.degree
+    alive = backend.alive
+    rows = np.asarray(new_rows, np.int32).copy()
+
+    # reverse-edge integration: both endpoints must still be alive
+    for log in rev_logs:
+        v = np.asarray(log.v, np.int64)
+        v_new = np.asarray(log.v_new, np.int64)
+        d = np.asarray(log.d, np.float32)
+        ok = (v >= 0) & (v < snap.n) & alive[np.clip(v, 0, None)] \
+            & alive[np.clip(v_new, 0, None)]
+        v, v_new, d = v[ok], v_new[ok], d[ok]
+        if not v.size:
+            continue
+        ut, inv = np.unique(v, return_inverse=True)
+        trow = rows[ut]
+        tvec, _ = store.peek(ut)
+        rvec, _ = store.peek(np.clip(trow, 0, None).reshape(-1))
+        rows[ut] = reverse_edge_rows_host(
+            trow, tvec, rvec.reshape(ut.size, R, -1), inv, v_new, d)
+
+    # window deletions are authoritative on the consolidated rows
+    rows[(rows >= 0) & ~alive[np.clip(rows, 0, None)]] = -1
+    rows[~alive[:snap.n]] = -1
+
+    # publish ONLY rows the rebuild/replay/scrub actually changed vs the
+    # frozen topology; untouched rows keep their live store contents
+    # (live-applied window reverse edges on a consolidation-untouched row
+    # are bitwise-identical to the replay's result, so skipping them is
+    # exact). e_in updates incrementally from the same edit set — the
+    # caller holds the update lock, so the critical section must be
+    # proportional to the consolidation's edit set, not the dataset.
+    e_in = backend.e_in.copy()
+    changed = np.where((rows != snap.rows).any(axis=1))[0]
+    for s in range(0, changed.size, chunk):
+        ids = changed[s:s + chunk]
+        old = store.peek_rows(ids)
+        np.subtract.at(e_in, old[old >= 0], 1)
+        new = rows[ids]
+        np.add.at(e_in, new[new >= 0], 1)
+        store.write(ids, None, new)
+    backend.version[changed] += 1
+
+    # live rows untouched by the rebuild may still carry reverse edges
+    # (applied during the window) to vertices inserted and then deleted
+    # within the same window — the replay filter drops those edges from
+    # `rows`, leaving rows[u] == snap.rows[u] and u outside `changed`.
+    # Every such row is named as a target by the logs, so the scrub set
+    # stays bounded by window activity.
+    stale = np.unique(np.concatenate(
+        [np.asarray(log.v, np.int64)[
+            ~alive[np.clip(np.asarray(log.v_new, np.int64), 0, None)]]
+         for log in rev_logs] or [np.zeros((0,), np.int64)]))
+    stale = stale[(stale >= 0) & (stale < snap.n)]
+    for s in range(0, stale.size, chunk):
+        ids = stale[s:s + chunk]
+        r = store.peek_rows(ids)
+        dead = (r >= 0) & ~alive[np.clip(r, 0, None)]
+        if dead.any():
+            np.subtract.at(e_in, r[dead], 1)
+            r[dead] = -1
+            store.write(ids, None, r)
+            backend.version[ids[dead.any(axis=1)]] += 1
+
+    # incremental subgraph appending: rows past the snapshot stay
+    # verbatim except that window deletions are authoritative there too
+    # (a window insert may have linked to a vertex deleted later in the
+    # window)
+    n = backend.n
+    for s in range(snap.n, n, chunk):
+        ids = np.arange(s, min(s + chunk, n))
+        r = store.peek_rows(ids)
+        dead = (r >= 0) & ~alive[np.clip(r, 0, None)]
+        if dead.any():
+            np.subtract.at(e_in, r[dead], 1)
+            r[dead] = -1
+            store.write(ids, None, r)
+            backend.version[ids[dead.any(axis=1)]] += 1
+    backend.e_in = e_in

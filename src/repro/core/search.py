@@ -1,15 +1,30 @@
 """ANNS with CPU-GPU co-processing (paper Algorithm 1), TPU adaptation.
 
-Batched greedy beam search: one vmap lane per query (the paper's
-one-thread-block-per-query), neighbor expansion restructured as batched
-gather + distance GEMV on the MXU. Each expansion consults the cache
-mapping table; hits read the bandwidth-tier copy, misses read the capacity
-tier and are logged so the post-batch WAVP pass (cache.py) can decide
-promote-vs-compute-in-place with batch-amortized transfer cost (the paper
-amortizes T_transfer over batches of 2048).
+Both serving paths run through ONE **hop-batched frontier executor**: a
+beam of ``sp.beam`` frontier candidates is expanded per *round*, their
+neighborhoods are resolved in bulk through the tier cascade, and a single
+jitted gather + distance + top-k-merge dispatch covers every hop in the
+beam — the paper's CUDA multi-stream coordination of batched frontier
+expansions (§4/§6) mapped onto XLA dispatch amortization:
+
+* **device arm** (``search_batch``): the capacity tier is device-resident,
+  so all rounds fuse into one jitted program (``lax.while_loop`` over
+  rounds); distances come from the ``kernels/l2_gather`` arm with the
+  device-cache overlay.
+* **tiered arm** (``search_tiered``): the host owns traversal + residency
+  over the disk-backed store; each round issues one bulk row fetch, one
+  vector cascade, and ONE jitted distance+merge dispatch — so device
+  dispatches per query drop from ``max_iters`` to ``ceil(max_iters/beam)``
+  — while the store's async prefetcher overlaps predicted next-frontier
+  disk reads against the in-flight dispatch (multi-stream pipelining,
+  paper §4.4).
+
+Every expansion consults the cache mapping table; hits read the bandwidth
+tier, misses the capacity tier, and both are logged for the post-batch
+WAVP pass (cache.py) which amortizes transfer cost over the batch.
 
 Returns per-query top-k plus the access/hit logs consumed by
-``repro.core.cache.apply_wavp``.
+``repro.core.cache.apply_wavp`` / ``apply_wavp_host``.
 """
 from __future__ import annotations
 
@@ -21,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import CacheState, GraphState, IndexState, SearchParams
+from repro.kernels.ops import gather_l2
 
 INF = jnp.float32(jnp.inf)
 
@@ -28,118 +44,212 @@ INF = jnp.float32(jnp.inf)
 class SearchResult(NamedTuple):
     ids: jax.Array        # [B, k]
     dists: jax.Array      # [B, k]
-    acc_ids: jax.Array    # [B, I*R] accessed vertex ids (-1 pad)
-    acc_hit: jax.Array    # [B, I*R] cache-hit flags
-    iters: jax.Array      # [B] iterations used
+    acc_ids: jax.Array    # [B, rounds*beam*R] accessed vertex ids (-1 pad)
+    acc_hit: jax.Array    # [B, rounds*beam*R] cache-hit flags
+    iters: jax.Array      # [B] expansion rounds used
 
 
-def _gather_tiered(graph: GraphState, cache: CacheState, ids):
-    """Fetch vectors for ids through the tier hierarchy: cached rows come
-    from the bandwidth tier, the rest from the capacity tier."""
-    slot = cache.h2d[jnp.clip(ids, 0)]
+def _n_rounds(sp: SearchParams) -> int:
+    """Round budget: ceil(total hop budget / beam width)."""
+    beam = max(1, sp.beam)
+    return max(1, -(-sp.max_iters // beam))
+
+
+# ---------------------------------------------------------------------------
+# Shared executor core (pure jnp, batched over queries). Both arms build
+# their jitted dispatch out of these three pieces.
+# ---------------------------------------------------------------------------
+
+def dup_mask_jnp(a):
+    """Later-occurrence duplicate flags for id batches [..., C] (the first
+    occurrence survives). This is the cross-tier round dedup: the same id
+    arriving from different tiers or different beam slots in one round
+    collapses to a single candidate, so it can never occupy multiple pool
+    slots. Sort-based (O(C log C), the jnp twin of ``dedup_mask``): a
+    pairwise-equality matrix would be O(C²) in beam·degree per round."""
+    order = jnp.argsort(a, axis=-1, stable=True)
+    srt = jnp.take_along_axis(a, order, axis=-1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros(srt.shape[:-1] + (1,), bool),
+         srt[..., 1:] == srt[..., :-1]], axis=-1)
+    inv = jnp.argsort(order, axis=-1, stable=True)
+    return jnp.take_along_axis(dup_sorted, inv, axis=-1)
+
+
+def select_frontier(pool_ids, pool_d, visited, beam: int):
+    """Pick the best ``beam`` unvisited finite pool slots per query and
+    mark them visited. Returns (curr [B, beam] ids, -1 for idle lanes;
+    visited')."""
+    sel = jnp.where(visited | ~jnp.isfinite(pool_d), INF, pool_d)
+    order = jnp.argsort(sel, axis=1, stable=True)[:, :beam]
+    ok = jnp.isfinite(jnp.take_along_axis(sel, order, axis=1))
+    curr = jnp.where(ok, jnp.take_along_axis(pool_ids, order, axis=1), -1)
+    upd = jnp.take_along_axis(visited, order, axis=1) | ok
+    visited = jax.vmap(lambda v, o, u: v.at[o].set(u))(visited, order, upd)
+    return curr, visited
+
+
+def merge_round(pool_ids, pool_d, visited, cand_ids, cand_d):
+    """Merge one round's candidate batch [B, C] into the pool [B, L].
+    ``cand_d`` must already be INF on invalid/dead lanes; duplicates
+    within the batch and ids already pooled are dropped here, preserving
+    the pool's one-slot-per-id invariant."""
+    L = pool_ids.shape[1]
+    in_pool = (cand_ids[:, :, None] == pool_ids[:, None, :]).any(-1)
+    cand_d = jnp.where(in_pool | dup_mask_jnp(cand_ids), INF, cand_d)
+    all_ids = jnp.concatenate([pool_ids, cand_ids], axis=1)
+    all_d = jnp.concatenate([pool_d, cand_d], axis=1)
+    all_vis = jnp.concatenate(
+        [visited, jnp.zeros(cand_ids.shape, bool)], axis=1)
+    keep = jnp.argsort(all_d, axis=1, stable=True)[:, :L]
+    return (jnp.take_along_axis(all_ids, keep, axis=1),
+            jnp.take_along_axis(all_d, keep, axis=1),
+            jnp.take_along_axis(all_vis, keep, axis=1))
+
+
+def init_pool(entry_ids, entry_d):
+    """Sort the (deduped) entry pool into executor state."""
+    d = jnp.where(dup_mask_jnp(entry_ids), INF, entry_d)
+    order = jnp.argsort(d, axis=1, stable=True)
+    return (jnp.take_along_axis(entry_ids, order, axis=1),
+            jnp.take_along_axis(d, order, axis=1),
+            jnp.zeros(entry_ids.shape, bool))
+
+
+# ---------------------------------------------------------------------------
+# Device arm: in-memory tiers, one fused jitted program
+# ---------------------------------------------------------------------------
+
+def _device_distances(graph: GraphState, cache: CacheState, ids, queries):
+    """Distances for an id batch [B, C] through the two device tiers: the
+    ``l2_gather`` kernel arm against the capacity table, overlaid with the
+    bandwidth-tier copy on cache hits. Invalid ids (< 0) come back +inf.
+    Returns (dists [B, C] fp32, device_hit [B, C])."""
+    cid = jnp.clip(ids, 0)
+    slot = cache.h2d[cid]
     hit = (slot >= 0) & (ids >= 0)
-    dev = cache.vectors[jnp.clip(slot, 0)]
-    host = graph.vectors[jnp.clip(ids, 0)]
-    # NB: no astype here — converting gathered rows makes XLA hoist a full
-    # fp32 copy of the table; distances accumulate in fp32 via einsum
-    return jnp.where(hit[:, None], dev, host), hit
+    d_cap = gather_l2(graph.vectors, ids, queries)
+    d_dev = gather_l2(cache.vectors, jnp.where(hit, slot, -1), queries)
+    return jnp.where(hit, d_dev, d_cap), hit
 
 
-def _sqdist(x, q):
-    """Squared L2 with fp32 accumulation over (possibly bf16) operands."""
-    diff = x - q
-    return jnp.einsum("kd,kd->k", diff, diff,
-                      preferred_element_type=jnp.float32)
+def _frontier_search(graph: GraphState, cache: CacheState, queries, entries,
+                     sp: SearchParams) -> SearchResult:
+    """Hop-batched frontier executor, device arm (traceable; callers jit).
+    queries [B, D], entries [B, L]."""
+    B = queries.shape[0]
+    L, R = sp.pool, graph.degree
+    beam = max(1, sp.beam)
+    rounds = _n_rounds(sp)
+    C = beam * R
+    queries = queries.astype(graph.vectors.dtype)
 
+    d0, _ = _device_distances(graph, cache, entries, queries)
+    d0 = jnp.where(graph.alive[jnp.clip(entries, 0)] & (entries >= 0),
+                   d0, INF)
+    pool_ids0, pool_d0, visited0 = init_pool(entries, d0)
 
-def _search_one(graph: GraphState, cache: CacheState, q, entry_ids,
-                sp: SearchParams):
-    L = sp.pool
-    R = graph.degree
-    I = sp.max_iters
-    q = q.astype(graph.vectors.dtype)
-
-    ev, _ = _gather_tiered(graph, cache, entry_ids)
-    d0 = _sqdist(ev, q)
-    d0 = jnp.where(graph.alive[entry_ids], d0, INF)
-    # dedup entry ids
-    dup = jnp.triu(entry_ids[:, None] == entry_ids[None, :], k=1).any(0)
-    d0 = jnp.where(dup, INF, d0)
-    order = jnp.argsort(d0)
-    ids0, dist0 = entry_ids[order], d0[order]
-    visited0 = jnp.zeros((L,), bool)
-
-    acc_ids0 = jnp.full((I, R), -1, jnp.int32)
-    acc_hit0 = jnp.zeros((I, R), bool)
+    acc_ids0 = jnp.full((B, rounds, C), -1, jnp.int32)
+    acc_hit0 = jnp.zeros((B, rounds, C), bool)
+    iters0 = jnp.zeros((B,), jnp.int32)
 
     def cond(s):
-        it, ids, dists, visited, *_ = s
-        frontier = (~visited) & jnp.isfinite(dists)
-        return (it < I) & frontier.any()
+        r, ids, dists, visited, *_ = s
+        return (r < rounds) & ((~visited) & jnp.isfinite(dists)).any()
 
     def body(s):
-        it, ids, dists, visited, acc_ids, acc_hit = s
-        sel = jnp.where(visited | ~jnp.isfinite(dists), INF, dists)
-        best = jnp.argmin(sel)
-        curr = ids[best]
-        visited = visited.at[best].set(True)
-
-        nb = graph.nbrs[jnp.clip(curr, 0)]
+        r, ids, dists, visited, acc_ids, acc_hit, iters = s
+        active = ((~visited) & jnp.isfinite(dists)).any(1)          # [B]
+        curr, visited = select_frontier(ids, dists, visited, beam)
+        nb = graph.nbrs[jnp.clip(curr, 0)]                # [B, beam, R]
+        nb = jnp.where(curr[..., None] >= 0, nb, -1).reshape(B, C)
         valid = (nb >= 0) & graph.alive[jnp.clip(nb, 0)]
-        xv, hit = _gather_tiered(graph, cache, nb)
-        d = _sqdist(xv, q)
-        # drop invalid + already-in-pool duplicates
-        in_pool = (nb[:, None] == ids[None, :]).any(1)
-        d = jnp.where(valid & ~in_pool, d, INF)
+        d, hit = _device_distances(graph, cache, nb, queries)
+        d = jnp.where(valid, d, INF)
+        ids, dists, visited = merge_round(ids, dists, visited, nb, d)
+        acc_ids = acc_ids.at[:, r].set(jnp.where(valid, nb, -1))
+        acc_hit = acc_hit.at[:, r].set(hit & valid)
+        return (r + 1, ids, dists, visited, acc_ids, acc_hit,
+                iters + active.astype(jnp.int32))
 
-        all_ids = jnp.concatenate([ids, nb])
-        all_d = jnp.concatenate([dists, d])
-        all_vis = jnp.concatenate([visited, jnp.zeros((R,), bool)])
-        keep = jnp.argsort(all_d)[:L]
-        ids, dists, visited = all_ids[keep], all_d[keep], all_vis[keep]
+    _, ids, dists, _, acc_ids, acc_hit, iters = jax.lax.while_loop(
+        cond, body,
+        (jnp.int32(0), pool_ids0, pool_d0, visited0, acc_ids0, acc_hit0,
+         iters0))
 
-        acc_ids = acc_ids.at[it].set(jnp.where(valid, nb, -1))
-        acc_hit = acc_hit.at[it].set(hit & valid)
-        return it + 1, ids, dists, visited, acc_ids, acc_hit
+    topk_ids = jnp.where(jnp.isfinite(dists[:, :sp.k]), ids[:, :sp.k], -1)
+    return SearchResult(topk_ids, dists[:, :sp.k],
+                        acc_ids.reshape(B, -1), acc_hit.reshape(B, -1),
+                        iters)
 
-    it, ids, dists, visited, acc_ids, acc_hit = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), ids0, dist0, visited0, acc_ids0, acc_hit0))
 
-    topk_ids = jnp.where(jnp.isfinite(dists[:sp.k]), ids[:sp.k], -1)
-    return SearchResult(topk_ids, dists[:sp.k],
-                        acc_ids.reshape(-1), acc_hit.reshape(-1), it)
+@partial(jax.jit, static_argnames=("sp",))
+def frontier_search(state: IndexState, queries, entries, sp: SearchParams
+                    ) -> SearchResult:
+    """Jitted executor entry with caller-chosen entry points (parity tests
+    and update paths pass deterministic entries here)."""
+    return _frontier_search(state.graph, state.cache,
+                            queries.astype(jnp.float32), entries, sp)
 
 
 @partial(jax.jit, static_argnames=("sp",))
 def search_batch(state: IndexState, queries, key, sp: SearchParams
                  ) -> SearchResult:
-    """Batched ANNS. queries [B, D]. Entry points are random (paper §4.2:
-    GPU-friendly, no seed maintenance under updates)."""
+    """Batched ANNS — thin entry point over the frontier executor.
+    queries [B, D]. Entry points are random (paper §4.2: GPU-friendly, no
+    seed maintenance under updates)."""
     B = queries.shape[0]
     n = jnp.maximum(state.graph.n, 1)
     entries = jax.random.randint(key, (B, sp.pool), 0, n, dtype=jnp.int32)
-    res = jax.vmap(lambda q, e: _search_one(state.graph, state.cache, q, e, sp)
-                   )(queries.astype(jnp.float32), entries)
-    return res
+    return _frontier_search(state.graph, state.cache,
+                            queries.astype(jnp.float32), entries, sp)
 
 
 # ---------------------------------------------------------------------------
-# Three-tier search: CPU traversal + disk IO, device distance compute
+# Tiered arm: CPU traversal + disk IO, one device dispatch per round
 # ---------------------------------------------------------------------------
 
 @jax.jit
 def _batch_sqdist(x, q):
-    """[B, R, D] gathered rows vs [B, D] queries -> [B, R] fp32 distances.
-    One fixed-shape jitted GEMV per expansion — the device-compute arm the
-    async prefetcher overlaps disk reads against (paper §4.4)."""
+    """[B, C, D] gathered rows vs [B, D] queries -> [B, C] fp32 distances."""
     diff = x - q[:, None, :]
     return jnp.einsum("brd,brd->br", diff, diff,
                       preferred_element_type=jnp.float32)
 
 
+@partial(jax.jit, static_argnames=("beam",))
+def _tiered_entry_dispatch(entry_ids, entry_vecs, entry_valid, queries,
+                           beam):
+    """Entry-pool distances + dedup + sort + first frontier selection:
+    the first of the per-round dispatches (shares the executor core with
+    the device arm). Pool state stays device-resident across rounds; only
+    the tiny [B, beam] frontier id matrix crosses back to the host."""
+    d = _batch_sqdist(entry_vecs, queries)
+    d = jnp.where(entry_valid, d, INF)
+    pool_ids, pool_d, visited = init_pool(entry_ids, d)
+    curr, visited = select_frontier(pool_ids, pool_d, visited, beam)
+    return pool_ids, pool_d, visited, curr
+
+
+@partial(jax.jit, static_argnames=("beam",))
+def _tiered_round_dispatch(pool_ids, pool_d, visited, cand_ids, cand_vecs,
+                           cand_valid, queries, beam):
+    """ONE jitted gather+distance+topk-merge(+next frontier selection)
+    dispatch covering every hop in the round's beam — the tiered arm of
+    the shared executor. Inputs/outputs holding pool state are device
+    arrays that never round-trip through the host."""
+    d = _batch_sqdist(cand_vecs, queries)
+    d = jnp.where(cand_valid, d, INF)
+    pool_ids, pool_d, visited = merge_round(pool_ids, pool_d, visited,
+                                            cand_ids, d)
+    curr, visited = select_frontier(pool_ids, pool_d, visited, beam)
+    return pool_ids, pool_d, visited, curr
+
+
 def dedup_mask(a):
     """Per-row duplicate flags for an int array [B, C] (any one occurrence
-    survives). Shared by the tiered search/update paths."""
+    survives). Host twin of ``dup_mask_jnp``; shared by the tiered update
+    paths."""
     order = np.argsort(a, axis=1, kind="stable")
     srt = np.take_along_axis(a, order, axis=1)
     dup_sorted = np.concatenate(
@@ -152,9 +262,10 @@ def dedup_mask(a):
 class TieredSearchResult(NamedTuple):
     ids: np.ndarray       # [B, k]
     dists: np.ndarray     # [B, k]
-    acc_ids: np.ndarray   # [B, I*R] accessed vertex ids (-1 pad)
-    acc_hit: np.ndarray   # [B, I*R] device-cache-hit flags
-    iters: int
+    acc_ids: np.ndarray   # [B, rounds*beam*R] accessed vertex ids (-1 pad)
+    acc_hit: np.ndarray   # [B, rounds*beam*R] device-cache-hit flags
+    iters: int            # expansion rounds executed
+    dispatches: int       # jitted device dispatches issued (1 + iters)
 
 
 def _cascade_vectors(ids_flat, h2d, cache_vec, store, f_lam):
@@ -176,18 +287,42 @@ def _cascade_vectors(ids_flat, h2d, cache_vec, store, f_lam):
     return vec, dev_hit
 
 
+def _predict_prefetch(store, nb, valid, f_lam, budget, probe=8):
+    """Predicted next-frontier prefetch (paper §4.4 multi-stream overlap):
+    the rows of this round's candidates are already window-resident (the
+    cascade promoted them), so peeking the hottest candidates' adjacency
+    is cheap; their non-resident neighbors are what the *next* round will
+    need from disk. Called while the round's device dispatch is in
+    flight, so the background disk reads overlap device compute."""
+    cand = np.unique(nb[valid])
+    if not cand.size:
+        return
+    if cand.size > probe:     # argpartition: this runs once per round
+        cand = cand[np.argpartition(-f_lam[cand], probe - 1)[:probe]]
+    hrows = store.peek_rows(cand)
+    nxt = np.unique(hrows[hrows >= 0])
+    nxt = nxt[store.loc[nxt] < 0]
+    if nxt.size:
+        if nxt.size > budget:
+            nxt = nxt[np.argpartition(-f_lam[nxt], budget - 1)[:budget]]
+        store.prefetch(nxt, f_lam)
+
+
 def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
-                  *, f_lam=None,
-                  prefetch_budget: int = 0) -> TieredSearchResult:
-    """Greedy beam search over a disk-backed graph (paper Algorithm 1 in
-    its GPU-CPU-disk form). The host owns the traversal and residency, the
-    device evaluates distances batch-at-a-time; every vector read cascades
-    device cache -> host window -> disk, and (optionally) the predicted
-    next frontier is enqueued to the store's async prefetcher ranked by
-    F_λ so disk latency hides behind the next distance batch.
+                  *, f_lam=None, prefetch_budget: int = 0,
+                  entry_ids=None) -> TieredSearchResult:
+    """Hop-batched frontier search over a disk-backed graph (paper
+    Algorithm 1 in its GPU-CPU-disk form) — the tiered arm of the shared
+    executor. The host owns traversal and residency; each round expands a
+    beam of ``sp.beam`` frontier candidates, resolves their neighborhoods
+    through the cascade device cache -> host window -> disk in bulk, and
+    issues ONE jitted distance+merge dispatch, with the predicted next
+    frontier enqueued to the store's async prefetcher while that dispatch
+    is in flight.
 
     backend: ``tiers.TieredBackend``; cache_mirror: ``cache.HostPlacement``
     (readers snapshot its arrays once, see HostPlacement docs).
+    ``entry_ids`` [B, pool] overrides the random entry pool (parity tests).
     """
     store = backend.store
     alive = backend.alive
@@ -201,77 +336,65 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
 
     queries = np.asarray(queries, np.float32)
     B, D = queries.shape
-    L, R, I, k = sp.pool, backend.degree, sp.max_iters, sp.k
+    L, R, k = sp.pool, backend.degree, sp.k
+    beam = max(1, sp.beam)
+    rounds = _n_rounds(sp)
+    C = beam * R
     n = max(backend.n, 1)
-    rng = np.random.default_rng(seed)
     qj = jnp.asarray(queries)
+    if entry_ids is None:
+        rng = np.random.default_rng(seed)
+        entry_ids = rng.integers(0, n, (B, L))
+    entry_ids = np.asarray(entry_ids, np.int64)
 
-    # entry pool: random entries (paper §4.2 — no seed maintenance)
-    pool_ids = rng.integers(0, n, (B, L))
-    ev, _ = _cascade_vectors(pool_ids.reshape(-1), h2d, cache_vec, store,
+    # entry pool: one cascade + one entry dispatch
+    ev, _ = _cascade_vectors(entry_ids.reshape(-1), h2d, cache_vec, store,
                              f_lam)
-    pool_d = np.array(_batch_sqdist(jnp.asarray(ev.reshape(B, L, D)), qj))
-    pool_d[~alive[pool_ids]] = np.inf
-    pool_d[dedup_mask(pool_ids)] = np.inf   # dedup random entries
-    o = np.argsort(pool_d, axis=1, kind="stable")
-    pool_ids = np.take_along_axis(pool_ids, o, axis=1)
-    pool_d = np.take_along_axis(pool_d, o, axis=1)
-    visited = np.zeros((B, L), bool)
+    pool_ids, pool_d, visited, curr_j = _tiered_entry_dispatch(
+        jnp.asarray(entry_ids, jnp.int32), jnp.asarray(ev.reshape(B, L, D)),
+        jnp.asarray(alive[entry_ids]), qj, beam)
+    dispatches = 1
+    curr = np.asarray(curr_j)                 # [B, beam], -1 = idle lane
 
-    acc_ids = np.full((B, I, R), -1, np.int32)
-    acc_hit = np.zeros((B, I, R), bool)
-    lanes = np.arange(B)
+    acc_ids = np.full((B, rounds, C), -1, np.int32)
+    acc_hit = np.zeros((B, rounds, C), bool)
     it = 0
-    for it in range(I):
-        sel = np.where(visited | ~np.isfinite(pool_d), np.inf, pool_d)
-        best = np.argmin(sel, axis=1)
-        active = np.isfinite(sel[lanes, best])
-        if not active.any():
+    for _ in range(rounds):
+        ok = curr >= 0
+        if not ok.any():
             break
-        curr = np.where(active, pool_ids[lanes, best], -1)
-        visited[lanes[active], best[active]] = True
-
-        # frontier rows come from the capacity tier (topology lives on
+        # ONE bulk row fetch for the whole beam (topology lives on
         # host/disk only; the device cache stores vectors)
-        ucur = np.unique(curr[active])
+        ucur = np.unique(curr[ok])
         _, urows = store.fetch(ucur, f_lam)
-        lut = {int(v): i for i, v in enumerate(ucur)}
-        nb = np.full((B, R), -1, np.int32)
-        nb[active] = urows[[lut[int(v)] for v in curr[active]]]
+        nb = np.full((B, beam, R), -1, np.int32)
+        # searchsorted over the (sorted) unique ids: O(|curr| log |ucur|),
+        # no O(dataset) scratch on the per-round hot path
+        nb[ok] = urows[np.searchsorted(ucur, curr[ok])]
+        nb = nb.reshape(B, C)
 
         valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
         xv, dev_hit = _cascade_vectors(nb.reshape(-1), h2d, cache_vec,
                                        store, f_lam)
-        d = np.asarray(_batch_sqdist(jnp.asarray(xv.reshape(B, R, D)), qj))
-        in_pool = (nb[:, :, None] == pool_ids[:, None, :]).any(-1)
-        d = np.where(valid & ~in_pool, d, np.inf)
-
+        # launch the round's single device dispatch (async); pool state
+        # stays device-resident, only `curr` crosses back. The prefetch
+        # prediction below overlaps with the in-flight dispatch.
+        pool_ids, pool_d, visited, curr_j = _tiered_round_dispatch(
+            pool_ids, pool_d, visited, jnp.asarray(nb),
+            jnp.asarray(xv.reshape(B, C, D)), jnp.asarray(valid), qj, beam)
+        dispatches += 1
         acc_ids[:, it] = np.where(valid, nb, -1)
-        acc_hit[:, it] = dev_hit.reshape(B, R) & valid
-
-        all_ids = np.concatenate([pool_ids, nb], axis=1)
-        all_d = np.concatenate([pool_d, d], axis=1)
-        all_vis = np.concatenate([visited, np.zeros((B, R), bool)], axis=1)
-        keep = np.argsort(all_d, axis=1, kind="stable")[:, :L]
-        pool_ids = np.take_along_axis(all_ids, keep, axis=1)
-        pool_d = np.take_along_axis(all_d, keep, axis=1)
-        visited = np.take_along_axis(all_vis, keep, axis=1)
-
+        acc_hit[:, it] = dev_hit.reshape(B, C) & valid
         if prefetch_budget > 0:
-            # predicted next frontier: best unvisited candidates; enqueue
-            # the hottest (top-F_λ) non-resident ones so their rows reach
-            # the host window while the next distance batch computes
-            head = pool_ids[:, :4].reshape(-1)
-            head = head[head >= 0]
-            cand = np.unique(head[store.loc[head] < 0])
-            if cand.size:
-                hot = cand[np.argsort(-f_lam[cand])][:prefetch_budget]
-                store.prefetch(hot, f_lam)
+            _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
+        curr = np.asarray(curr_j)             # sync point for the round
+        it += 1
 
+    pool_ids, pool_d = np.asarray(pool_ids), np.asarray(pool_d)
     topk_ids = np.where(np.isfinite(pool_d[:, :k]), pool_ids[:, :k], -1)
     return TieredSearchResult(topk_ids.astype(np.int32), pool_d[:, :k],
                               acc_ids.reshape(B, -1),
-                              acc_hit.reshape(B, -1), it + 1)
+                              acc_hit.reshape(B, -1), it, dispatches)
 
 
 def brute_force_topk(graph: GraphState, queries, k):

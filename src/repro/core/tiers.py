@@ -125,6 +125,21 @@ class TieredStore:
                 out_n[~hit] = dn
             return out_v, out_n
 
+    def peek_rows(self, ids: np.ndarray):
+        """Adjacency-only ``peek``: rows through the window overlay
+        without promotion, counters, or the vector copy. The MVCC
+        snapshot and the prefetch predictor read topology at scale —
+        copying D floats per id alongside would dominate their cost."""
+        ids = np.asarray(ids)
+        with self._lock:
+            out_n = np.empty((len(ids), self.disk.degree), np.int32)
+            slots = self.loc[ids]
+            hit = slots >= 0
+            out_n[hit] = self.host_nbr[slots[hit]]
+            if (~hit).any():
+                out_n[~hit] = np.asarray(self.disk.nbr[ids[~hit]])
+            return out_n
+
     def write(self, ids, vectors=None, nbrs=None):
         """Write-through update: disk always, host window where resident
         (keeps the overlay coherent without dirty tracking; demotion

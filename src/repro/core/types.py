@@ -90,10 +90,19 @@ jax.tree_util.register_pytree_node(
 class SearchParams(NamedTuple):
     k: int = 10
     pool: int = 64          # candidate pool size L >= k
-    max_iters: int = 96     # beam-search iteration cap
+    max_iters: int = 96     # total hop (expansion) budget per query
     decay: float = 0.9      # F_recent sliding-window decay per batch
     max_promote: int = 2048 # transfer batch (paper amortizes over 2048)
     policy: str = "wavp"    # wavp | lru | lfu | lrfu | never | always
+    beam: int = 16          # frontier expansions batched per round; the
+    #                         executor runs ceil(max_iters/beam) rounds and
+    #                         issues ONE device dispatch per round, so the
+    #                         tiered path's dispatch count per query is
+    #                         ~max_iters/beam instead of max_iters. beam=1
+    #                         recovers the classic per-hop greedy order;
+    #                         16 is the bench sweet spot (qps AND recall:
+    #                         wider rounds trade re-rank adaptivity for
+    #                         coverage + dispatch amortization).
 
 
 def init_stats() -> Stats:

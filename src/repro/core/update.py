@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.build import compute_e_in, rank_based_reorder
-from repro.core.search import _search_one, dedup_mask
+from repro.core.search import _frontier_search, dedup_mask
 from repro.core.types import GraphState, IndexState, SearchParams
 
 INF = jnp.float32(jnp.inf)
@@ -65,11 +65,11 @@ def insert_batch(state: IndexState, new_vecs, key, sp: SearchParams):
     ids = graph.n + jnp.arange(Bi, dtype=jnp.int32)
 
     # phase 1 (paper §5.1): GPU-side candidate search on the current graph
+    # (through the shared hop-batched frontier executor)
     n = jnp.maximum(graph.n, 1)
     entries = jax.random.randint(key, (Bi, sp.pool), 0, n, dtype=jnp.int32)
-    res = jax.vmap(lambda q, e: _search_one(graph, cache, q, e,
-                                            sp._replace(k=sp.pool)))(
-        new_vecs, entries)
+    res = _frontier_search(graph, cache, new_vecs, entries,
+                           sp._replace(k=sp.pool))
     cand_ids, cand_d = res.ids, res.dists                  # [Bi, L] sorted
 
     # phase 2: heuristic (rank-based) reordering then edge establishment
@@ -209,13 +209,37 @@ def rank_based_reorder_host(cand_ids, cand_d, cand_rows, degree):
     return sel
 
 
+def reverse_edge_rows_host(trow, tvec, nbr_vecs, inv, new_ids, d_edge):
+    """One-shot reverse-edge application over fetched target rows — the
+    numpy twin of ``_reverse_edge_scatter`` shared by ``insert_tiered``
+    and the tiered MVCC merge. For edge e (target ``inv[e]`` -> vertex
+    ``new_ids[e]`` at distance ``d_edge[e]``): use a free slot if any,
+    else replace the current worst neighbor if the new edge is closer;
+    write conflicts resolve last-writer-wins. Returns the updated rows
+    [U, R] (``trow`` is not mutated)."""
+    nb_d = ((nbr_vecs - tvec[:, None, :]) ** 2).sum(-1)          # [U, R]
+    occ = trow >= 0
+    worst = np.argmax(np.where(occ, nb_d, -np.inf), axis=1)
+    has_free = (~occ).any(axis=1)
+    free_idx = np.argmax(~occ, axis=1)
+    slot = np.where(has_free, free_idx, worst)
+    max_d = np.where(occ, nb_d, -np.inf).max(axis=1)
+    improves = has_free[inv] | (d_edge < max_d[inv])
+    out = trow.copy()
+    out[inv[improves], slot[inv][improves]] = \
+        np.asarray(new_ids)[improves].astype(np.int32)
+    return out
+
+
 def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     """Batched insertion against the disk-backed capacity tier (paper §5.1
     over the three-tier hierarchy): candidate search cascades through the
     store, new rows are written through the host window, and reverse edges
     are applied to the fetched target rows with the same free-slot /
     replace-worst / last-writer-wins semantics as ``insert_batch``.
-    Returns the new ids. Caller serializes (engine update stream).
+    Returns ``(new_ids, RevLog)`` — the reverse-edge triplet log (numpy
+    arrays) is consumed by the tiered MVCC merge when a consolidation
+    snapshot is in flight. Caller serializes (engine update stream).
     """
     from repro.core.search import search_tiered
     store = backend.store
@@ -238,9 +262,7 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     # phase 2: rank-based reorder over the candidates' (fetched) rows
     uc = np.unique(np.clip(cand_ids, 0, None))
     _, urows = store.fetch(uc, f_lam)
-    lut = np.zeros((int(uc.max()) + 2,), np.int64)
-    lut[uc] = np.arange(uc.size)
-    cand_rows = urows[lut[np.clip(cand_ids, 0, None)]]
+    cand_rows = urows[np.searchsorted(uc, np.clip(cand_ids, 0, None))]
     cand_rows[cand_ids < 0] = -1
     sel = rank_based_reorder_host(cand_ids, cand_d, cand_rows, R)
 
@@ -256,65 +278,62 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     flat_new = np.repeat(ids, R)
     ok = flat_t >= 0
     flat_t, flat_new = flat_t[ok], flat_new[ok]
+    d_edge = np.zeros((0,), np.float32)
     if flat_t.size:
         ut, inv = np.unique(flat_t, return_inverse=True)
         tvec, trow = store.fetch(ut, f_lam)
         rvec, _ = store.peek(np.clip(trow, 0, None).reshape(-1))
-        rvec = rvec.reshape(ut.size, R, -1)
-        nb_d = ((rvec - tvec[:, None, :]) ** 2).sum(-1)          # [U, R]
-        occ = trow >= 0
-        worst = np.argmax(np.where(occ, nb_d, -np.inf), axis=1)
-        has_free = (~occ).any(axis=1)
-        free_idx = np.argmax(~occ, axis=1)
-        slot = np.where(has_free, free_idx, worst)
-        max_d = np.where(occ, nb_d, -np.inf).max(axis=1)
-
         d_edge = ((tvec[inv] - new_vecs[(flat_new - n0)]) ** 2).sum(-1)
-        improves = has_free[inv] | (d_edge < max_d[inv])
-        new_rows = trow.copy()
-        # later edges overwrite earlier ones at the same (target, slot) —
-        # identical to the jit path's last-writer-wins scatter
-        new_rows[inv[improves], slot[inv][improves]] = \
-            flat_new[improves].astype(np.int32)
+        new_rows = reverse_edge_rows_host(
+            trow, tvec, rvec.reshape(ut.size, R, -1), inv, flat_new, d_edge)
         np.add.at(backend.e_in, trow[trow >= 0], -1)
         np.add.at(backend.e_in, new_rows[new_rows >= 0], 1)
         store.write(ut, None, new_rows)
         backend.version[ut] += 1
-    return ids
+    rev = RevLog(flat_t.astype(np.int64), flat_new.astype(np.int64),
+                 np.asarray(d_edge, np.float32))
+    return ids, rev
 
 
-def consolidate_tiered(backend, chunk=256):
-    """Stage 3 (paper §5.2.2) for the disk tier: global consolidation
-    streamed over bounded chunks. Per alive vertex, the neighbor list is
-    rebuilt from {alive out-neighbors} ∪ {alive out-neighbors of deleted
-    out-neighbors}, pruned to degree by distance; dead rows are cleared.
-    Reads go through ``peek`` so the scan never thrashes the host window;
-    writes go through the store so the overlay stays coherent. The caller
-    (engine) runs this on the update stream — foreground searches keep
-    reading rows lock-free and see the repair progressively.
+def consolidate_tiered(backend, chunk=256, *, snapshot=None):
+    """Stage 3 (paper §5.2.2) for the disk tier, MVCC form (paper §5.3):
+    global consolidation computed against a *frozen* topology snapshot
+    while inserts/deletes/searches continue on the active store. Per
+    snapshot-alive vertex, the neighbor list is rebuilt from {alive
+    out-neighbors} ∪ {alive out-neighbors of deleted out-neighbors},
+    pruned to degree by distance; dead rows are cleared. Adjacency comes
+    from ``snapshot.rows`` (never the live store); vectors are immutable
+    per id, so they stream through ``peek`` (bounded chunks, no window
+    thrash). Returns the rebuilt rows [snapshot.n, R] WITHOUT publishing
+    them — callers publish via ``mvcc.merge_consolidated_tiered``, which
+    re-applies the window's reverse-edge log and makes window deletions
+    authoritative. When ``snapshot`` is None a snapshot is taken and the
+    result merged in place (serial mode: no concurrent update stream).
     """
+    from repro.core import mvcc
+    serial = snapshot is None
+    if serial:
+        snapshot = mvcc.snapshot_tiered(backend)
     store = backend.store
     R = backend.degree
-    alive = backend.alive
-    n = backend.n
-    for s in range(0, n, chunk):
-        ids = np.arange(s, min(s + chunk, n))
+    snap_rows, snap_alive = snapshot.rows, snapshot.alive
+    snap_n = snapshot.n
+    new_rows = snap_rows.copy()
+    for s in range(0, snap_n, chunk):
+        ids = np.arange(s, min(s + chunk, snap_n))
         C = ids.size
-        svec, rows = store.peek(ids)
+        rows = snap_rows[ids]
         valid = rows >= 0
-        dead = valid & ~alive[np.clip(rows, 0, None)]
-        if not dead.any() and bool(alive[ids].all()):
+        dead = valid & ~snap_alive[np.clip(rows, 0, None)]
+        if not dead.any() and bool(snap_alive[ids].all()):
             continue
+        svec, _ = store.peek(ids)
         hop2 = np.full((C, R, R), -1, np.int32)
-        du = np.unique(rows[dead]) if dead.any() else np.empty(0, np.int64)
-        if du.size:
-            _, drows = store.peek(du)
-            lut = np.zeros((int(du.max()) + 1,), np.int64)
-            lut[du] = np.arange(du.size)
-            hop2[dead] = drows[lut[rows[dead]]]
+        if dead.any():
+            hop2[dead] = snap_rows[rows[dead]]       # frozen topology
         cand = np.concatenate(
             [np.where(dead, -1, rows), hop2.reshape(C, R * R)], axis=1)
-        okc = (cand >= 0) & alive[np.clip(cand, 0, None)] \
+        okc = (cand >= 0) & snap_alive[np.clip(cand, 0, None)] \
             & (cand != ids[:, None])
         cu = np.unique(np.clip(cand, 0, None))
         cvec, _ = store.peek(cu)
@@ -328,19 +347,14 @@ def consolidate_tiered(backend, chunk=256):
         o = np.argsort(dtop, axis=1, kind="stable")
         top = np.take_along_axis(top, o, axis=1)
         dtop = np.take_along_axis(dtop, o, axis=1)
-        new_rows = np.where(np.isfinite(dtop),
-                            np.take_along_axis(cand, top, axis=1),
-                            -1).astype(np.int32)
-        new_rows[~alive[ids]] = -1
-        store.write(ids, None, new_rows)
-        backend.version[ids] += 1
-    # e_in rebuild: one streaming accumulation pass
-    e_in = np.zeros((backend.capacity,), np.int32)
-    for s in range(0, n, chunk):
-        ids = np.arange(s, min(s + chunk, n))
-        _, rows = store.peek(ids)
-        np.add.at(e_in, rows[rows >= 0], 1)
-    backend.e_in = e_in
+        out = np.where(np.isfinite(dtop),
+                       np.take_along_axis(cand, top, axis=1),
+                       -1).astype(np.int32)
+        out[~snap_alive[ids]] = -1
+        new_rows[ids] = out
+    if serial:
+        mvcc.merge_consolidated_tiered(backend, snapshot, new_rows, [])
+    return new_rows
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -1,16 +1,22 @@
 """Fused row-gather + L2-distance Pallas TPU kernel.
 
-The inner loop of SVFusion's beam search: for each query, fetch the K
-neighbor vectors named by the mapping table and compute squared-L2
-distances. On GPU this is a warp-per-row gather; the TPU-native shape
-(DESIGN.md §2) is: neighbor ids scalar-prefetched (SMEM), row DMAs
-HBM→VMEM per id, then one [K,D]·[D] contraction on the MXU via the
-||x||² − 2·x·q + ||q||² expansion.
+The inner loop of SVFusion's hop-batched frontier executor: for each
+query, fetch the K neighbor vectors named by the id matrix and compute
+squared-L2 distances. On GPU this is a warp-per-row gather; the
+TPU-native shape (DESIGN.md §2) is: neighbor ids scalar-prefetched
+(SMEM), row DMAs HBM→VMEM per id, then one [K,D]·[D] contraction on the
+MXU via the ||x||² − 2·x·q + ||q||² expansion.
 
-Grid: one step per query. Table stays in ANY/HBM; only the K gathered rows
-ever touch VMEM (K·D·4 bytes, e.g. 64×128×4 = 32 KiB ≪ 16 MiB VMEM).
-Validated in interpret mode against ref.py (CPU container); targets
-pl.pallas_call + BlockSpec for real TPU lowering.
+The executor feeds the batched (Q, beam·degree) id matrix of a whole
+expansion round, so K runs to beam·degree and ids may carry invalid
+lanes (-1: padded beam slots, pruned edges). Invalid ids are clamped for
+the DMA and their distances forced to +inf in-kernel — indexing the
+table at -1 is never attempted.
+
+Grid: one step per query. Table stays in ANY/HBM; only the K gathered
+rows ever touch VMEM (K·D·4 bytes, e.g. 128×128×4 = 64 KiB ≪ 16 MiB
+VMEM). Validated in interpret mode against ref.py (CPU container);
+targets pl.pallas_call + BlockSpec for real TPU lowering.
 """
 from __future__ import annotations
 
@@ -22,12 +28,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(ids_ref, q_ref, table_ref, out_ref, rows_ref, sem):
+def _kernel(ids_ref, q_ref, idv_ref, table_ref, out_ref, rows_ref, sem):
     K = out_ref.shape[1]
     b = pl.program_id(0)
 
     def fetch(k, _):
-        idx = ids_ref[b, k]
+        idx = jnp.maximum(ids_ref[b, k], 0)    # clamp invalid lanes
         cp = pltpu.make_async_copy(table_ref.at[pl.ds(idx, 1), :],
                                    rows_ref.at[pl.ds(k, 1), :], sem)
         cp.start()
@@ -40,12 +46,14 @@ def _kernel(ids_ref, q_ref, table_ref, out_ref, rows_ref, sem):
     x2 = jnp.sum(x * x, axis=-1)
     q2 = jnp.sum(q * q)
     xq = jnp.dot(x, q, preferred_element_type=jnp.float32)   # MXU
-    out_ref[0] = x2 - 2.0 * xq + q2
+    d = x2 - 2.0 * xq + q2
+    out_ref[0] = jnp.where(idv_ref[0] >= 0, d, jnp.inf)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def l2_gather(table, ids, queries, *, interpret=True):
-    """table [N, D] f32; ids [B, K] int32; queries [B, D] f32 -> [B, K]."""
+    """table [N, D] f32; ids [B, K] int32 (-1 = invalid lane);
+    queries [B, D] f32 -> [B, K] fp32, +inf on invalid lanes."""
     B, K = ids.shape
     N, D = table.shape
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -53,6 +61,7 @@ def l2_gather(table, ids, queries, *, interpret=True):
         grid=(B,),
         in_specs=[
             pl.BlockSpec((1, D), lambda b, ids: (b, 0)),          # query row
+            pl.BlockSpec((1, K), lambda b, ids: (b, 0)),          # valid mask
             pl.BlockSpec(memory_space=pltpu.ANY),                 # table HBM
         ],
         out_specs=pl.BlockSpec((1, K), lambda b, ids: (b, 0)),
@@ -61,9 +70,10 @@ def l2_gather(table, ids, queries, *, interpret=True):
             pltpu.SemaphoreType.DMA,
         ],
     )
+    ids = ids.astype(jnp.int32)
     return pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K), jnp.float32),
         interpret=interpret,
-    )(ids, queries.astype(jnp.float32), table.astype(jnp.float32))
+    )(ids, queries.astype(jnp.float32), ids, table.astype(jnp.float32))

@@ -5,7 +5,13 @@ import jax.numpy as jnp
 
 @jax.jit
 def l2_gather_ref(table, ids, queries):
-    """table [N,D]; ids [B,K]; queries [B,D] -> squared L2 dists [B,K]."""
-    x = table[ids]                                   # [B, K, D]
+    """table [N,D]; ids [B,K] (-1 = invalid lane); queries [B,D] ->
+    squared L2 dists [B,K] fp32, +inf on invalid lanes.
+
+    K is arbitrary — the frontier executor passes the batched
+    (Q, beam*degree) id matrix of a whole expansion round.
+    """
+    x = table[jnp.clip(ids, 0)]                      # [B, K, D]
     d = x - queries[:, None, :].astype(table.dtype)
-    return jnp.sum(d.astype(jnp.float32) ** 2, axis=-1)
+    out = jnp.sum(d.astype(jnp.float32) ** 2, axis=-1)
+    return jnp.where(ids >= 0, out, jnp.inf)

@@ -59,9 +59,18 @@ class RAGPipeline:
             self.docs.pop(int(i), None)
 
     def retrieve(self, prompt_tokens: np.ndarray, k=4) -> list[Doc]:
-        q = self.embed(prompt_tokens[None, :])
+        return self.retrieve_batch(prompt_tokens[None, :], k)[0]
+
+    def retrieve_batch(self, prompt_tokens: np.ndarray,
+                       k=4) -> list[list[Doc]]:
+        """Batched retrieval for a [B, T] prompt batch: every prompt rides
+        the same hop-batched frontier executor dispatches (one jitted
+        round per beam for the whole batch, not per prompt), which is how
+        the serving tier amortizes device round-trips under load."""
+        q = self.embed(prompt_tokens)
         ids, _ = self.index.search(q)
-        return [self.docs[int(i)] for i in ids[0][:k] if int(i) in self.docs]
+        return [[self.docs[int(i)] for i in row[:k] if int(i) in self.docs]
+                for row in ids]
 
     def augment(self, prompt_tokens: np.ndarray, k=4, budget=128):
         """Prepend retrieved chunks (truncated to the context budget)."""

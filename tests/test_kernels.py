@@ -58,6 +58,37 @@ def test_l2_gather_duplicate_and_boundary_ids():
                                atol=1e-3)
 
 
+def test_l2_gather_invalid_lanes_masked():
+    """The frontier executor feeds -1 lanes (padded beam slots, pruned
+    edges): the kernel must clamp the DMA index and return +inf, never
+    index the table at -1."""
+    table = jax.random.normal(KEY, (64, 16))
+    ids = jnp.array([[-1, 5, -1, 0, 63, -1, 7, 2]])
+    qs = jax.random.normal(KEY, (1, 16))
+    out = np.asarray(l2_gather(table, ids, qs, interpret=True))
+    ref = np.asarray(l2_gather_ref(table, ids, qs))
+    mask = np.asarray(ids) < 0
+    assert np.isinf(out[mask]).all() and np.isinf(ref[mask]).all()
+    np.testing.assert_allclose(out[~mask], ref[~mask], rtol=1e-4, atol=1e-3)
+
+
+def test_l2_gather_round_batched_id_matrix():
+    """Executor round shape: the (Q, beam·degree) id matrix of a whole
+    expansion round, with duplicates across beam slots and -1 padding."""
+    beam, deg = 4, 32
+    table = jax.random.normal(KEY, (512, 64))
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 512, (3, beam * deg))
+    ids[:, rng.integers(0, beam * deg, 17)] = -1   # pruned/padded lanes
+    ids[0, :deg] = ids[0, deg:2 * deg]             # cross-beam duplicates
+    ids = jnp.asarray(ids, jnp.int32)
+    qs = jax.random.normal(jax.random.PRNGKey(2), (3, 64))
+    out = l2_gather(table, ids, qs, interpret=True)
+    ref = l2_gather_ref(table, ids, qs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-2)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(1, 40), st.integers(1, 24), st.integers(0, 2 ** 31 - 1))
 def test_topk_merge_properties(L, R, seed):

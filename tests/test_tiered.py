@@ -1,6 +1,7 @@
 """Three-tier (GPU-CPU-disk) path tests: cascading lookup through the
-serving engine, TieredStore thread-safety, WAVP-shared demotion order, and
-the bandwidth-tier dtype regression."""
+serving engine, MVCC-snapshotted tiered consolidation, TieredStore
+thread-safety, WAVP-shared demotion order, and the bandwidth-tier dtype
+regression."""
 import threading
 
 import jax
@@ -9,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.core import cache as C
+from repro.core import mvcc
+from repro.core import update as U
 from repro.core.build import build_graph, build_index
 from repro.core.engine import EngineConfig, SVFusionEngine
 from repro.core.search import brute_force_topk, recall_at_k, search_batch
@@ -110,6 +113,118 @@ def test_tiered_engine_prefetch_populates_window(tmp_path, dataset):
 
 
 # ---------------------------------------------------------------------------
+# MVCC-snapshotted tiered consolidation (paper §5.3 on the disk tier)
+# ---------------------------------------------------------------------------
+
+def test_tiered_mvcc_protocol_no_lost_writes(tmp_path, dataset):
+    """Deterministic replay of the snapshot/merge protocol: inserts and
+    deletes land in the window between snapshot and merge; after the merge
+    every acknowledged write survives — new vertices keep their rows and
+    reverse edges, window deletions are authoritative."""
+    eng = make_engine(tmp_path, dataset, consolidate_threshold=2.0)
+    try:
+        rng = np.random.default_rng(7)
+        be = eng.state.tiered
+        eng.delete(np.arange(0, 500))            # pre-snapshot deletions
+        snap = mvcc.snapshot_tiered(be)
+
+        # window ops on the active log while "consolidation runs": TWO
+        # insert batches, so the merge must replay the reverse-edge logs
+        # batch by batch (a single concatenated replay would collapse a
+        # target's window edges onto one slot and drop the earlier batch)
+        newv = rng.normal(size=(40, D)).astype(np.float32)
+        ids, rev = U.insert_tiered(be, eng._placement, newv,
+                                   eng.cfg.search, seed=11)
+        newv2 = rng.normal(size=(40, D)).astype(np.float32)
+        ids2, rev2 = U.insert_tiered(be, eng._placement, newv2,
+                                     eng.cfg.search, seed=12)
+        eng.delete(np.arange(500, 560))          # window deletions
+        win_dead = np.arange(500, 560)
+        # vertices inserted AND deleted within the same window: their
+        # live-applied reverse edges must not survive the merge even on
+        # rows the rebuild never touched
+        eng.delete(ids2[-8:])
+        ids2, newv2 = ids2[:-8], newv2[:-8]
+
+        new_rows = U.consolidate_tiered(be, snapshot=snap)
+        mvcc.merge_consolidated_tiered(be, snap, new_rows, [rev, rev2])
+
+        # acknowledged inserts survive: alive, rows intact, reachable
+        assert be.alive[ids].all() and be.alive[ids2].all()
+        _, rows = be.store.peek(np.arange(be.n))
+        # reverse-edge integration: BOTH batches' ids appear in old rows
+        assert np.isin(ids, rows[:snap.n]).any()
+        assert np.isin(ids2, rows[:snap.n]).any()
+        found, _ = eng.search(newv)
+        assert float((found[:, 0] == ids).mean()) > 0.9
+        found2_, _ = eng.search(newv2)
+        assert float((found2_[:, 0] == ids2).mean()) > 0.9
+        # window deletions stay authoritative (rows cleared, edges gone)
+        assert not be.alive[win_dead].any()
+        assert (rows[win_dead] == -1).all()
+        dead_edges = (rows >= 0) & ~be.alive[np.clip(rows, 0, None)]
+        assert dead_edges.sum() == 0
+        # e_in rebuilt consistently with the merged rows
+        e_in = np.zeros((be.capacity,), np.int32)
+        np.add.at(e_in, rows[rows >= 0], 1)
+        np.testing.assert_array_equal(e_in, be.e_in)
+    finally:
+        eng.close()
+
+
+def test_tiered_mvcc_concurrent_consolidation(tmp_path, dataset):
+    """Engine-level: a consolidation pass overlapping live inserts,
+    deletes and searches loses no acknowledged write, and recall matches
+    a serial (non-overlapped) run of the same workload."""
+    rng = np.random.default_rng(9)
+    queries = rng.normal(size=(32, D)).astype(np.float32)
+    inserts = [rng.normal(size=(32, D)).astype(np.float32)
+               for _ in range(4)]
+
+    def run(tag, overlap):
+        eng = make_engine(tmp_path / tag, dataset, consolidate_threshold=2.0)
+        try:
+            eng.delete(np.arange(0, 600))
+            if not overlap:
+                eng.consolidate_async(wait=True)     # serial reference
+                th = None
+            else:
+                th = eng.consolidate_async(wait=False)
+            acked = []
+            for part in inserts:
+                acked.append(eng.insert(part))
+                eng.search(queries)
+                eng.delete(np.arange(600, 610))      # idempotent re-deletes
+            if th is not None:
+                th.join()
+            eng.wait_background()
+            be = eng.state.tiered
+            # no acknowledged insert lost
+            for ids, part in zip(acked, inserts):
+                assert be.alive[ids].all(), f"{tag}: lost inserted ids"
+                found, _ = eng.search(part)
+                assert float((found[:, 0] == ids).mean()) > 0.9, \
+                    f"{tag}: inserted vectors unreachable"
+            assert not be.alive[:610].any()
+            found, _ = eng.search(queries)
+            mirror = np.concatenate(
+                [np.arange(610, N)] + [i for i in acked])
+            mvecs = np.concatenate(
+                [dataset[610:]] + inserts)
+            d = ((queries[:, None, :] - mvecs[None]) ** 2).sum(-1)
+            truth = mirror[np.argsort(d, axis=1)[:, :10]]
+            hits = (found[:, :10, None] == truth[:, None, :]).any(1)
+            return float(hits.mean())
+        finally:
+            eng.close()
+
+    rec_serial = run("serial", overlap=False)
+    rec_conc = run("conc", overlap=True)
+    assert rec_conc >= 0.8
+    assert rec_conc >= rec_serial - 0.05, (rec_conc, rec_serial)
+
+
+# ---------------------------------------------------------------------------
 # TieredStore semantics
 # ---------------------------------------------------------------------------
 
@@ -145,6 +260,12 @@ def test_tiered_store_write_through_coherence(tmp_path):
     # peek must not promote or count
     h, m = store.hits, store.misses
     store.peek(np.arange(40, 60))
+    assert (store.hits, store.misses) == (h, m)
+    assert store.loc[55] == -1
+    # rows-only peek: same overlay semantics, still no promote/count
+    _, full_rows = store.peek(np.arange(0, 60))
+    np.testing.assert_array_equal(store.peek_rows(np.arange(0, 60)),
+                                  full_rows)
     assert (store.hits, store.misses) == (h, m)
     assert store.loc[55] == -1
 
