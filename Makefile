@@ -19,4 +19,4 @@ bench-disk:
 	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py
 
 bench-smoke:
-	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --smoke
+	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --smoke --gate

@@ -49,6 +49,10 @@ def main():
     print(f"search p50={percentile(lats, 50)*1e3:.1f}ms "
           f"p99={percentile(lats, 99)*1e3:.1f}ms")
     print("engine stats:", eng.stats())
+    # orderly shutdown: a background consolidation may still be mid-jit
+    # (the coalesced+speculative stream drains faster than consolidation)
+    # and exiting across a live XLA dispatch aborts the interpreter
+    eng.close()
 
 
 if __name__ == "__main__":

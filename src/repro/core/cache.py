@@ -253,7 +253,8 @@ class HostPlacement:
 
 
 def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
-                    *, alive, e_in, fetch_vectors, now=0) -> None:
+                    *, alive, e_in, fetch_vectors, now=0,
+                    cascade_promote: bool = True) -> None:
     """Post-batch placement (Algorithm 2) over host mirrors — the tiered
     twin of ``apply_wavp`` with the same decision rules.
 
@@ -261,6 +262,16 @@ def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
     device-hit flags from the frontier executor's round logs. alive/e_in:
     host graph metadata arrays. fetch_vectors(ids) resolves promoted
     payloads through the cascading host-window/disk lookup.
+
+    ``cascade_promote``: batched serving touches every cached resident
+    every batch, so the strict clock rule (ref==1 slots are untouchable
+    this sweep) re-protects the whole cache each pass and promotion
+    freezes at the cold-start set — cascade hits (ids served by host or
+    disk during search) can then never earn a device slot no matter
+    their F_λ. With the flag on (default), clock protection *orders* the
+    sweep (ref==0 residents are still evicted first) but a protected
+    resident is displaced when the incomer's F_λ strictly beats it —
+    predictive replacement stays in charge, the freeze is gone.
     """
     N = hp.h2d.shape[0]
     M = hp.n_slots
@@ -268,10 +279,11 @@ def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
     hit = np.asarray(acc_hit).reshape(-1)
     valid = ids >= 0
 
-    counts = np.zeros((N,), np.float32)
-    np.add.at(counts, ids[valid], 1.0)
-    miss_counts = np.zeros((N,), np.float32)
-    np.add.at(miss_counts, ids[valid & ~hit], 1.0)
+    # bincount, not np.add.at: the access log is ~rounds·beam·R·B ids per
+    # batch and add.at's generalized fancy-index path costs ~10x a bincount
+    counts = np.bincount(ids[valid], minlength=N).astype(np.float32)
+    miss_counts = np.bincount(ids[valid & ~hit],
+                              minlength=N).astype(np.float32)
 
     if sp.policy == "lru":
         f_recent = np.where(counts > 0, np.float32(now) + 1.0, hp.f_recent)
@@ -317,11 +329,18 @@ def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
         occ_score = np.where(occ, score[np.clip(hp.slot_hid, 0, None)],
                              -np.inf)
         protected = (hp.ref > 0) & occ
-        evict_key = np.where(~occ, -np.inf,
-                             np.where(protected, np.inf, occ_score))
-        victims = np.argsort(evict_key, kind="stable")[:P]
-        improves = ~protected[victims] & (
-            (evict_key[victims] < prom_score) | ~occ[victims])
+        if cascade_promote:
+            # empty first, then ref==0 ascending F_λ, then ref==1
+            # ascending F_λ; any occupant yields to a strictly hotter
+            # incomer (see docstring — protection orders, never freezes)
+            victims = np.lexsort((occ_score, protected))[:P]
+            improves = ~occ[victims] | (occ_score[victims] < prom_score)
+        else:
+            evict_key = np.where(~occ, -np.inf,
+                                 np.where(protected, np.inf, occ_score))
+            victims = np.argsort(evict_key, kind="stable")[:P]
+            improves = ~protected[victims] & (
+                (evict_key[victims] < prom_score) | ~occ[victims])
 
         vslot = victims[improves]
         new_hid = top[improves]

@@ -58,6 +58,161 @@ class EngineConfig:
     host_window: int = 0                 # host-window slots (0 -> cap // 4)
     prefetch: bool = True                # async frontier prefetcher
     prefetch_budget: int = 32            # ids enqueued per search iteration
+    # -- speculative pipeline + cross-query coalescing (paper §4.4) --
+    speculate: bool = True               # two-stage speculative tiered arm
+    spec_width: int = 0                  # staged guesses/query (0 -> beam)
+    spec_rank: str = "flam"              # frontier predictor: flam | dist
+    #                                      (dist: exact host re-rank — wins
+    #                                      only when delta fetches are
+    #                                      genuinely IO-bound, see ROADMAP)
+    coalesce: bool = True                # adaptive cross-query micro-batching
+    coalesce_max_batch: int = 256        # max queries per merged dispatch
+    coalesce_window: float = 2e-3        # max adaptive coalescing wait (s)
+    wavp_cascade_promote: bool = True    # cascade hits displace frozen slots
+
+
+class _SearchFuture:
+    """Demux handle for one coalesced search request."""
+
+    __slots__ = ("queries", "submitted", "_event", "ids", "dists", "error",
+                 "latency")
+
+    def __init__(self, queries):
+        self.queries = queries
+        self.submitted = time.perf_counter()
+        self._event = threading.Event()
+        self.ids = None
+        self.dists = None
+        self.error = None
+        self.latency = 0.0
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout=None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("coalesced search did not complete")
+        if self.error is not None:
+            raise self.error
+        return self.ids, self.dists
+
+
+class CoalescingScheduler:
+    """Adaptive cross-query coalescing (paper §4.4, adaptive resource
+    management): requests arriving within a short window — or until the
+    micro-batch fills — are stacked into ONE executor invocation and the
+    results are demultiplexed per request, so N concurrent submitters
+    share each round's fixed dispatch cost instead of paying it N times.
+    The window adapts to load: it halves whenever a dispatch went out
+    uncoalesced (light load — a lone caller converges to ~direct-call
+    p50) and doubles whenever requests actually merged (heavy load —
+    deeper micro-batches amortize further), clamped to
+    [min_window, max_window]."""
+
+    def __init__(self, search_fn, *, max_batch=256, max_window=2e-3,
+                 min_window=5e-5):
+        self._search = search_fn
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._th: Optional[threading.Thread] = None
+        self.max_batch = max_batch
+        self.max_window = max_window
+        self.min_window = min_window
+        self.window = min_window
+        self.requests = 0      # requests served
+        self.queries = 0       # query rows served
+        self.dispatches = 0    # merged executor invocations
+        self.coalesced = 0     # dispatches that merged > 1 request
+
+    # -- client side ----------------------------------------------------
+    def submit(self, queries) -> _SearchFuture:
+        fut = _SearchFuture(np.asarray(queries, np.float32))
+        self._ensure_started()
+        with self._lock:   # closed-check + enqueue atomic vs stop()'s drain
+            if self._closed:
+                raise RuntimeError("CoalescingScheduler is stopped (engine "
+                                   "closed); no further searches accepted")
+            self._q.put(fut)
+        return fut
+
+    def search(self, queries):
+        return self.submit(queries).result()
+
+    # -- dispatcher -----------------------------------------------------
+    def _ensure_started(self):
+        if self._th is not None and self._th.is_alive():
+            return
+        with self._lock:
+            if self._closed:
+                return
+            if self._th is None or not self._th.is_alive():
+                self._th = threading.Thread(target=self._run, daemon=True)
+                self._th.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            rows = len(first.queries)
+            deadline = time.perf_counter() + self.window
+            while rows < self.max_batch:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=left)
+                except queue.Empty:
+                    break
+                batch.append(nxt)
+                rows += len(nxt.queries)
+            if len(batch) == 1:
+                self.window = max(self.min_window, self.window * 0.5)
+            else:
+                self.window = min(self.max_window, self.window * 2.0)
+                self.coalesced += 1
+            try:
+                ids, dists = self._search(
+                    np.concatenate([f.queries for f in batch], axis=0))
+                off = 0
+                now = time.perf_counter()
+                for f in batch:
+                    b = len(f.queries)
+                    f.ids, f.dists = ids[off:off + b], dists[off:off + b]
+                    f.latency = now - f.submitted
+                    off += b
+            except Exception as e:
+                for f in batch:
+                    f.error = e
+            finally:
+                self.requests += len(batch)
+                self.queries += rows
+                self.dispatches += 1
+                for f in batch:
+                    f._event.set()
+
+    def stop(self):
+        """Terminal shutdown: stop the dispatcher and FAIL any request
+        still queued — an orphaned future would otherwise hang its caller
+        forever in ``result()``. Submissions after stop() raise."""
+        with self._lock:
+            self._closed = True
+        self._stop.set()
+        if self._th is not None:
+            self._th.join(timeout=2.0)
+            self._th = None
+        while True:
+            try:
+                fut = self._q.get_nowait()
+            except queue.Empty:
+                break
+            fut.error = RuntimeError("CoalescingScheduler stopped before "
+                                     "this request was dispatched")
+            fut._event.set()
 
 
 class SVFusionEngine:
@@ -112,6 +267,11 @@ class SVFusionEngine:
         self._search_rounds = 0        # tiered executor round accounting
         self._search_dispatches = 0    # device dispatches issued by search
         self._search_batches = 0
+        self._spec_hits = 0            # speculative-pipeline frontier hits
+        self._spec_misses = 0
+        self._coalescer = (CoalescingScheduler(
+            self._search_exec, max_batch=cfg.coalesce_max_batch,
+            max_window=cfg.coalesce_window) if cfg.coalesce else None)
         self._bg_threads: list = []
         self.latencies: dict[str, list] = {"search": [], "insert": [],
                                            "delete": []}
@@ -168,8 +328,35 @@ class SVFusionEngine:
 
     # ------------------------------------------------------------------
     def search(self, queries, update_cache=True):
-        """Batched search. Returns (ids, dists) as numpy. Batches are padded
-        to power-of-two buckets to bound the number of jit specializations."""
+        """Batched search. Returns (ids, dists) as numpy. With coalescing
+        enabled (default) the request joins the engine's adaptive
+        cross-query micro-batch: concurrent callers are stacked into ONE
+        executor invocation and demultiplexed, and the window shrinks
+        itself under light load so a lone caller pays ~the direct-call
+        latency (paper §4.4 adaptive resource management)."""
+        queries = np.asarray(queries, np.float32)
+        if self._coalescer is not None and update_cache and len(queries):
+            return self._coalescer.search(queries)
+        return self._search_exec(queries, update_cache)
+
+    def submit_search(self, queries):
+        """Async entry to the coalescing scheduler: returns a future-like
+        handle (``.result() -> (ids, dists)``, ``.latency``). Concurrent
+        submitters share executor dispatches."""
+        queries = np.asarray(queries, np.float32)
+        if self._coalescer is None:
+            fut = _SearchFuture(queries)
+            try:
+                fut.ids, fut.dists = self._search_exec(queries)
+                fut.latency = time.perf_counter() - fut.submitted
+            except Exception as e:   # pragma: no cover - surfaced by result()
+                fut.error = e
+            fut._event.set()
+            return fut
+        return self._coalescer.submit(queries)
+
+    def _search_exec(self, queries, update_cache=True):
+        """One executor invocation (the coalescer's dispatch target)."""
         if self._backend is not None:
             return self._search_tiered(queries, update_cache)
         t0 = time.perf_counter()
@@ -200,22 +387,39 @@ class SVFusionEngine:
         return ids, np.asarray(res.dists)
 
     def _search_tiered(self, queries, update_cache=True):
-        """Three-tier search: cascading lookup + post-batch host placement."""
+        """Three-tier search: speculative pipeline + cascading lookup +
+        post-batch host placement. Batches are padded to power-of-two
+        buckets so the coalescer's variable micro-batch sizes compile
+        O(log) dispatch specializations, not one per size."""
         from repro.core.search import search_tiered
         t0 = time.perf_counter()
         with self._cache_lock:
             seed = int(self._rng.integers(0, 2 ** 31 - 1))
         backend = self._backend
+        queries = np.asarray(queries, np.float32)
+        B = queries.shape[0]
+        Bp = 1 << max(0, (B - 1)).bit_length()
+        if Bp != B:
+            queries = np.concatenate(
+                [queries, np.zeros((Bp - B, queries.shape[1]), np.float32)])
         f_lam = self._placement.scores(backend.e_in)   # one O(N) pass/batch
         res = search_tiered(
             self._backend, self._placement, queries, seed, self.cfg.search,
             f_lam=f_lam,
             prefetch_budget=(self.cfg.prefetch_budget if self.cfg.prefetch
-                             else 0))
+                             else 0),
+            speculate=self.cfg.speculate, spec_width=self.cfg.spec_width,
+            spec_rank=self.cfg.spec_rank)
+        if Bp != B:   # drop pad lanes from results AND placement logs
+            res = res._replace(ids=res.ids[:B], dists=res.dists[:B],
+                               acc_ids=res.acc_ids[:B],
+                               acc_hit=res.acc_hit[:B])
         with self._cache_lock:    # concurrent search streams share these
             self._search_rounds += res.iters
             self._search_dispatches += res.dispatches
             self._search_batches += 1
+            self._spec_hits += res.spec_hits
+            self._spec_misses += res.spec_misses
         if update_cache:
             with self._cache_lock:
                 Cache.apply_wavp_host(
@@ -224,7 +428,8 @@ class SVFusionEngine:
                     e_in=backend.e_in,
                     fetch_vectors=lambda i: backend.store.fetch(
                         i, f_lam, count=False)[0],
-                    now=self._update_batches)
+                    now=self._update_batches,
+                    cascade_promote=self.cfg.wavp_cascade_promote)
         self.latencies["search"].append(time.perf_counter() - t0)
         return res.ids, res.dists
 
@@ -457,12 +662,23 @@ class SVFusionEngine:
             nb = max(self._search_batches, 1)
             d["search_rounds_per_batch"] = self._search_rounds / nb
             d["search_dispatches_per_batch"] = self._search_dispatches / nb
+            d["spec_hits"] = self._spec_hits
+            d["spec_misses"] = self._spec_misses
+            d["spec_hit_rate"] = (self._spec_hits
+                                  / max(self._spec_hits
+                                        + self._spec_misses, 1))
             dim = self._backend.dim
         else:
             d["n"] = int(st.graph.n)
             d["alive"] = int(st.graph.alive.sum())
             dim = st.graph.vectors.shape[1]
         d["consolidations"] = self._consolidations
+        if self._coalescer is not None:
+            c = self._coalescer
+            d["coalesce_requests"] = c.requests
+            d["coalesce_dispatches"] = c.dispatches
+            d["coalesce_batch_mean"] = c.queries / max(c.dispatches, 1)
+            d["coalesce_window_us"] = c.window * 1e6
         # modeled per-access time on v5e (DESIGN.md §2): this machine has
         # one physical tier, so tier economics are reported via the
         # calibrated cost model applied to observed hit/miss/transfer counts
@@ -478,14 +694,25 @@ class SVFusionEngine:
         """Stop background machinery and flush the disk tier (no-op in
         device mode)."""
         self.wait_background()
+        if self._coalescer is not None:
+            self._coalescer.stop()
         if self._backend is not None:
             self._backend.close()
 
 
 class MultiStreamRunner:
     """Search/update streams over the engine (the multi-stream analogue):
-    N search worker threads + one dedicated update stream consuming an op
-    queue with adaptive batching."""
+    search requests flow through the engine's cross-query coalescing
+    scheduler — concurrent requests are stacked into one executor
+    invocation within the adaptive window and demultiplexed per request —
+    plus one dedicated update stream consuming an op queue.
+    ``n_search_streams`` bounds the requests concurrently in flight (each
+    stream submits one and waits on its future, which is exactly what
+    lets the coalescer merge across streams). ``max_batch`` /
+    ``batch_timeout`` are kept for API compatibility only — merge depth
+    and window now belong to the engine (``coalesce_max_batch`` /
+    ``coalesce_window``), which the runner must not mutate: the scheduler
+    is shared with every other client of the engine."""
 
     def __init__(self, engine: SVFusionEngine, n_search_streams=2,
                  max_batch=64, batch_timeout=0.002):
@@ -518,33 +745,17 @@ class MultiStreamRunner:
     def submit_delete(self, ids):
         self._q.put(("delete", np.asarray(ids, np.int64)))
 
-    def _drain(self, q, first):
-        """Adaptive batching: collect up to max_batch items within timeout."""
-        items = [first]
-        deadline = time.perf_counter() + self.batch_timeout
-        while len(items) < self.max_batch:
-            try:
-                items.append(q.get(timeout=max(0.0, deadline - time.perf_counter())))
-            except queue.Empty:
-                break
-        return items
-
     def _search_worker(self):
         while not self._stop.is_set():
             try:
-                first = self._sq.get(timeout=0.05)
+                qarr, tag, t0 = self._sq.get(timeout=0.05)
             except queue.Empty:
                 continue
-            items = self._drain(self._sq, first)
             try:
-                qs = np.concatenate([i[0] for i in items], axis=0)
-                ids, dists = self.engine.search(qs)
-                off = 0
-                for qarr, tag, t0 in items:
-                    b = qarr.shape[0]
-                    self.results.append((tag, ids[off:off + b],
-                                         time.perf_counter() - t0))
-                    off += b
+                # one in-flight request per stream; the engine's coalescer
+                # merges across streams (and any direct submitters)
+                ids, _ = self.engine.search(qarr)
+                self.results.append((tag, ids, time.perf_counter() - t0))
             except Exception as e:  # pragma: no cover
                 self.errors.append(e)
 

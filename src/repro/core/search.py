@@ -12,12 +12,23 @@ expansions (§4/§6) mapped onto XLA dispatch amortization:
   rounds); distances come from the ``kernels/l2_gather`` arm with the
   device-cache overlay.
 * **tiered arm** (``search_tiered``): the host owns traversal + residency
-  over the disk-backed store; each round issues one bulk row fetch, one
-  vector cascade, and ONE jitted distance+merge dispatch — so device
-  dispatches per query drop from ``max_iters`` to ``ceil(max_iters/beam)``
-  — while the store's async prefetcher overlaps predicted next-frontier
-  disk reads against the in-flight dispatch (multi-stream pipelining,
-  paper §4.4).
+  over the disk-backed store, and runs as a **two-stage speculative
+  pipeline** (paper §4.4 multi-stream overlap): while round N's single
+  jitted distance+merge dispatch is in flight, the host predicts round
+  N+1's frontier (entry stage: exact host distances; later rounds: the
+  WAVP F_λ probe), stages the predicted rows and their neighborhoods'
+  vectors, and enqueues disk prefetch one hop further. When the real
+  frontier reads back, staged ids feed the next dispatch immediately and
+  only mispredicted ids cost a delta fetch — the per-round read-back sync
+  no longer serializes host IO behind device compute.
+
+XLA-CPU note: a variadic (key, payload) sort — what ``jnp.argsort``
+lowers to — costs ~10x a single-operand sort on this backend, and the
+executor's merge used three of them per round. The core ops are built on
+``lax.top_k`` (stable: equal values keep ascending-index order, matching
+stable-argsort semantics) plus, for duplicate detection, ONE single-key
+sort of ids packed with their lane index; semantics are unchanged (the
+parity suite pins them against the per-hop reference).
 
 Every expansion consults the cache mapping table; hits read the bandwidth
 tier, misses the capacity tier, and both are logged for the post-batch
@@ -60,13 +71,46 @@ def _n_rounds(sp: SearchParams) -> int:
 # their jitted dispatch out of these three pieces.
 # ---------------------------------------------------------------------------
 
-def dup_mask_jnp(a):
+def _lane_bits(width: int) -> int:
+    return max(1, (width - 1).bit_length())
+
+
+def _packable(id_bound, width: int) -> bool:
+    """True when (id, lane) pairs over ``width`` lanes pack exactly into an
+    int32 key: ids below ``id_bound`` shifted left still fit, and -1 pad
+    lanes keep distinct negative keys (arithmetic shift recovers the id)."""
+    return (id_bound is not None
+            and int(id_bound) < (1 << (31 - _lane_bits(width))))
+
+
+def _take(a, idx):
+    return jnp.take_along_axis(a, idx, axis=-1)
+
+
+def dup_mask_jnp(a, id_bound=None):
     """Later-occurrence duplicate flags for id batches [..., C] (the first
     occurrence survives). This is the cross-tier round dedup: the same id
     arriving from different tiers or different beam slots in one round
     collapses to a single candidate, so it can never occupy multiple pool
-    slots. Sort-based (O(C log C), the jnp twin of ``dedup_mask``): a
-    pairwise-equality matrix would be O(C²) in beam·degree per round."""
+    slots. When ``id_bound`` (exclusive id upper bound, static) packs, the
+    sort is ONE single-operand key sort of ``id·2^bits + lane`` — ~10x
+    cheaper than the argsort pair-sort fallback on the CPU backend, with
+    identical semantics (keys are unique, so sort stability is moot)."""
+    C = a.shape[-1]
+    if _packable(id_bound, C):
+        bits = _lane_bits(C)
+        lead = a.shape[:-1]
+        flat = a.reshape((-1, C)).astype(jnp.int32)
+        iota = jnp.arange(C, dtype=jnp.int32)
+        s = jnp.sort((flat << bits) | iota, axis=-1)
+        sid = s >> bits                      # arithmetic shift: -1 pads ok
+        dup_sorted = jnp.concatenate(
+            [jnp.zeros((flat.shape[0], 1), bool),
+             sid[:, 1:] == sid[:, :-1]], axis=-1)
+        pos = s & ((1 << bits) - 1)
+        bidx = jnp.arange(flat.shape[0], dtype=jnp.int32)[:, None]
+        out = jnp.zeros(flat.shape, bool).at[bidx, pos].set(dup_sorted)
+        return out.reshape(lead + (C,))
     order = jnp.argsort(a, axis=-1, stable=True)
     srt = jnp.take_along_axis(a, order, axis=-1)
     dup_sorted = jnp.concatenate(
@@ -79,40 +123,67 @@ def dup_mask_jnp(a):
 def select_frontier(pool_ids, pool_d, visited, beam: int):
     """Pick the best ``beam`` unvisited finite pool slots per query and
     mark them visited. Returns (curr [B, beam] ids, -1 for idle lanes;
-    visited')."""
+    visited'). ``lax.top_k`` keeps stable-argsort order (ties resolve to
+    the lower index)."""
     sel = jnp.where(visited | ~jnp.isfinite(pool_d), INF, pool_d)
-    order = jnp.argsort(sel, axis=1, stable=True)[:, :beam]
-    ok = jnp.isfinite(jnp.take_along_axis(sel, order, axis=1))
-    curr = jnp.where(ok, jnp.take_along_axis(pool_ids, order, axis=1), -1)
-    upd = jnp.take_along_axis(visited, order, axis=1) | ok
-    visited = jax.vmap(lambda v, o, u: v.at[o].set(u))(visited, order, upd)
+    negd, order = jax.lax.top_k(-sel, beam)
+    ok = jnp.isfinite(negd)
+    curr = jnp.where(ok, _take(pool_ids, order), -1)
+    upd = _take(visited, order) | ok
+    bidx = jnp.arange(pool_ids.shape[0], dtype=jnp.int32)[:, None]
+    visited = visited.at[bidx, order].set(upd)
     return curr, visited
 
 
-def merge_round(pool_ids, pool_d, visited, cand_ids, cand_d):
+def merge_round(pool_ids, pool_d, visited, cand_ids, cand_d, id_bound=None):
     """Merge one round's candidate batch [B, C] into the pool [B, L].
     ``cand_d`` must already be INF on invalid/dead lanes; duplicates
     within the batch and ids already pooled are dropped here, preserving
-    the pool's one-slot-per-id invariant."""
+    the pool's one-slot-per-id invariant.
+
+    Fast path: pool and candidate ids concatenate into ONE packed-key
+    sort — within a sorted id run, pool lanes (lane < L) precede
+    candidate lanes, so a lane is a duplicate exactly when it continues
+    a run (already pooled OR repeated in the batch). The top-L selection
+    (``lax.top_k``) then runs directly in id-sorted lane order: gathers
+    only, no scatter back to original lanes. Equal finite distances on
+    *distinct* ids may tie-break differently from original-lane order —
+    for exact duplicates (the only systematic ties) the survivor set is
+    unchanged, so pool contents are unaffected on non-degenerate data.
+    The argsort-era O(C·L) compare + pair-sorts remain as the fallback
+    for unpackable id ranges."""
     L = pool_ids.shape[1]
-    in_pool = (cand_ids[:, :, None] == pool_ids[:, None, :]).any(-1)
-    cand_d = jnp.where(in_pool | dup_mask_jnp(cand_ids), INF, cand_d)
     all_ids = jnp.concatenate([pool_ids, cand_ids], axis=1)
-    all_d = jnp.concatenate([pool_d, cand_d], axis=1)
+    T = all_ids.shape[1]
     all_vis = jnp.concatenate(
         [visited, jnp.zeros(cand_ids.shape, bool)], axis=1)
-    keep = jnp.argsort(all_d, axis=1, stable=True)[:, :L]
-    return (jnp.take_along_axis(all_ids, keep, axis=1),
-            jnp.take_along_axis(all_d, keep, axis=1),
-            jnp.take_along_axis(all_vis, keep, axis=1))
+    if _packable(id_bound, T):
+        bits = _lane_bits(T)
+        iota = jnp.arange(T, dtype=jnp.int32)
+        s = jnp.sort((all_ids.astype(jnp.int32) << bits) | iota, axis=-1)
+        sid = s >> bits
+        pos = s & ((1 << bits) - 1)
+        cont = jnp.concatenate(
+            [jnp.zeros((s.shape[0], 1), bool), sid[:, 1:] == sid[:, :-1]],
+            axis=-1)
+        all_d = jnp.concatenate([pool_d, cand_d], axis=1)
+        d_srt = jnp.where(cont & (pos >= L), INF, _take(all_d, pos))
+        _, keep = jax.lax.top_k(-d_srt, L)
+        return (_take(sid, keep), _take(d_srt, keep),
+                _take(all_vis, _take(pos, keep)))
+    in_pool = (cand_ids[:, :, None] == pool_ids[:, None, :]).any(-1)
+    cand_d = jnp.where(in_pool | dup_mask_jnp(cand_ids, id_bound),
+                       INF, cand_d)
+    all_d = jnp.concatenate([pool_d, cand_d], axis=1)
+    _, keep = jax.lax.top_k(-all_d, L)
+    return _take(all_ids, keep), _take(all_d, keep), _take(all_vis, keep)
 
 
-def init_pool(entry_ids, entry_d):
+def init_pool(entry_ids, entry_d, id_bound=None):
     """Sort the (deduped) entry pool into executor state."""
-    d = jnp.where(dup_mask_jnp(entry_ids), INF, entry_d)
-    order = jnp.argsort(d, axis=1, stable=True)
-    return (jnp.take_along_axis(entry_ids, order, axis=1),
-            jnp.take_along_axis(d, order, axis=1),
+    d = jnp.where(dup_mask_jnp(entry_ids, id_bound), INF, entry_d)
+    _, order = jax.lax.top_k(-d, d.shape[1])
+    return (_take(entry_ids, order), _take(d, order),
             jnp.zeros(entry_ids.shape, bool))
 
 
@@ -139,15 +210,16 @@ def _frontier_search(graph: GraphState, cache: CacheState, queries, entries,
     queries [B, D], entries [B, L]."""
     B = queries.shape[0]
     L, R = sp.pool, graph.degree
-    beam = max(1, sp.beam)
+    beam = max(1, min(sp.beam, L))
     rounds = _n_rounds(sp)
     C = beam * R
+    id_bound = graph.capacity            # static: drives the packed dedup
     queries = queries.astype(graph.vectors.dtype)
 
     d0, _ = _device_distances(graph, cache, entries, queries)
     d0 = jnp.where(graph.alive[jnp.clip(entries, 0)] & (entries >= 0),
                    d0, INF)
-    pool_ids0, pool_d0, visited0 = init_pool(entries, d0)
+    pool_ids0, pool_d0, visited0 = init_pool(entries, d0, id_bound)
 
     acc_ids0 = jnp.full((B, rounds, C), -1, jnp.int32)
     acc_hit0 = jnp.zeros((B, rounds, C), bool)
@@ -166,7 +238,8 @@ def _frontier_search(graph: GraphState, cache: CacheState, queries, entries,
         valid = (nb >= 0) & graph.alive[jnp.clip(nb, 0)]
         d, hit = _device_distances(graph, cache, nb, queries)
         d = jnp.where(valid, d, INF)
-        ids, dists, visited = merge_round(ids, dists, visited, nb, d)
+        ids, dists, visited = merge_round(ids, dists, visited, nb, d,
+                                          id_bound)
         acc_ids = acc_ids.at[:, r].set(jnp.where(valid, nb, -1))
         acc_hit = acc_hit.at[:, r].set(hit & valid)
         return (r + 1, ids, dists, visited, acc_ids, acc_hit,
@@ -206,42 +279,54 @@ def search_batch(state: IndexState, queries, key, sp: SearchParams
 
 
 # ---------------------------------------------------------------------------
-# Tiered arm: CPU traversal + disk IO, one device dispatch per round
+# Tiered arm: CPU traversal + disk IO, one device dispatch per round,
+# speculative double-buffered staging between rounds
 # ---------------------------------------------------------------------------
 
 @jax.jit
 def _batch_sqdist(x, q):
-    """[B, C, D] gathered rows vs [B, D] queries -> [B, C] fp32 distances."""
-    diff = x - q[:, None, :]
-    return jnp.einsum("brd,brd->br", diff, diff,
-                      preferred_element_type=jnp.float32)
+    """[B, C, D] gathered rows vs [B, D] queries -> [B, C] fp32 distances.
+    Expansion form (‖x‖² − 2x·q + ‖q‖²): the inner product maps onto the
+    batched-matmul path, ~1.4x the subtract-then-reduce einsum on CPU."""
+    xq = jnp.matmul(x, q[:, :, None],
+                    preferred_element_type=jnp.float32)[..., 0]
+    x2 = jnp.einsum("bcd,bcd->bc", x, x,
+                    preferred_element_type=jnp.float32)
+    q2 = jnp.einsum("bd,bd->b", q, q,
+                    preferred_element_type=jnp.float32)[:, None]
+    return x2 - 2.0 * xq + q2
 
 
-@partial(jax.jit, static_argnames=("beam",))
+@partial(jax.jit, static_argnames=("beam", "id_bound"))
 def _tiered_entry_dispatch(entry_ids, entry_vecs, entry_valid, queries,
-                           beam):
+                           beam, id_bound):
     """Entry-pool distances + dedup + sort + first frontier selection:
     the first of the per-round dispatches (shares the executor core with
     the device arm). Pool state stays device-resident across rounds; only
     the tiny [B, beam] frontier id matrix crosses back to the host."""
     d = _batch_sqdist(entry_vecs, queries)
     d = jnp.where(entry_valid, d, INF)
-    pool_ids, pool_d, visited = init_pool(entry_ids, d)
+    pool_ids, pool_d, visited = init_pool(entry_ids, d, id_bound)
     curr, visited = select_frontier(pool_ids, pool_d, visited, beam)
     return pool_ids, pool_d, visited, curr
 
 
-@partial(jax.jit, static_argnames=("beam",))
-def _tiered_round_dispatch(pool_ids, pool_d, visited, cand_ids, cand_vecs,
-                           cand_valid, queries, beam):
+@partial(jax.jit, static_argnames=("beam", "id_bound"))
+def _tiered_round_dispatch(pool_ids, pool_d, visited, cand_ids, uniq_vecs,
+                           cand_inv, cand_valid, queries, beam, id_bound):
     """ONE jitted gather+distance+topk-merge(+next frontier selection)
     dispatch covering every hop in the round's beam — the tiered arm of
-    the shared executor. Inputs/outputs holding pool state are device
-    arrays that never round-trip through the host."""
-    d = _batch_sqdist(cand_vecs, queries)
+    the shared executor. The host ships each round's *unique* vectors
+    ``uniq_vecs [U, D]`` (U padded to a power-of-two bucket to bound jit
+    specializations) plus the lane->unique map ``cand_inv [B, C]``; the
+    [B, C, D] candidate matrix is gathered here, so transfer volume
+    scales with unique ids, not beam·degree lanes. Pool state never
+    round-trips through the host."""
+    xv = uniq_vecs[cand_inv]
+    d = _batch_sqdist(xv, queries)
     d = jnp.where(cand_valid, d, INF)
     pool_ids, pool_d, visited = merge_round(pool_ids, pool_d, visited,
-                                            cand_ids, d)
+                                            cand_ids, d, id_bound)
     curr, visited = select_frontier(pool_ids, pool_d, visited, beam)
     return pool_ids, pool_d, visited, curr
 
@@ -266,34 +351,196 @@ class TieredSearchResult(NamedTuple):
     acc_hit: np.ndarray   # [B, rounds*beam*R] device-cache-hit flags
     iters: int            # expansion rounds executed
     dispatches: int       # jitted device dispatches issued (1 + iters)
+    spec_hits: int = 0    # frontier rows already staged at read-back
+    spec_misses: int = 0  # frontier rows delta-fetched after read-back
+
+    @property
+    def spec_hit_rate(self) -> float:
+        t = self.spec_hits + self.spec_misses
+        return self.spec_hits / t if t else 0.0
 
 
-def _cascade_vectors(ids_flat, h2d, cache_vec, store, f_lam):
-    """Resolve vectors for a flat id batch through the hierarchy:
-    device cache (mirror) -> host window -> disk. Returns (vectors
-    [n, D] fp32, device_hit [n] bool). Invalid ids (<0) read row 0 of
-    whatever tier and must be masked by the caller."""
-    cid = np.clip(ids_flat, 0, None)
-    slot = h2d[cid]
-    dev_hit = (slot >= 0) & (ids_flat >= 0)
-    vec = np.zeros((len(ids_flat), store.disk.dim), np.float32)
-    if dev_hit.any():
-        vec[dev_hit] = cache_vec[slot[dev_hit]]
-    rest = ~dev_hit & (ids_flat >= 0)   # pad lanes never reach the store
-    if rest.any():
-        uniq, inv = np.unique(cid[rest], return_inverse=True)
-        uv, _ = store.fetch(uniq, f_lam)
-        vec[rest] = uv[inv]
-    return vec, dev_hit
+def _resolve_unique_vectors(ids, h2d, cache_vec, store, f_lam):
+    """Vectors for a batch of *unique* non-negative ids through the
+    cascade device cache (mirror) -> host window -> disk. Returns
+    (vectors [U, D] fp32, device_hit [U])."""
+    out = np.empty((len(ids), store.disk.dim), np.float32)
+    slot = h2d[ids]
+    hit = slot >= 0
+    if hit.any():
+        out[hit] = cache_vec[slot[hit]]
+    miss = ~hit
+    if miss.any():
+        out[miss] = store.fetch(ids[miss], f_lam)[0]
+    return out, hit
+
+
+def _host_sqdist(x, q):
+    """Numpy twin of ``_batch_sqdist`` for host-side frontier prediction:
+    [B, C, D] vs [B, D] -> [B, C]."""
+    diff = x - q[:, None, :]
+    return np.einsum("bcd,bcd->bc", diff, diff)
+
+
+def predict_frontier(ids, valid, f_lam, width, d_host=None):
+    """Ranked next-frontier guess [B, width] (-1 = no guess) — the F_λ
+    probe of the old prefetch predictor extended to return the guess
+    itself: per query, the top-``width`` valid candidates by host-side
+    score. The entry stage passes exact host distances (``d_host``, the
+    entry vectors are host-resident anyway) and predicts the first
+    frontier almost perfectly; later rounds rank by the WAVP F_λ
+    predictor — hot hub candidates are the likeliest next expansions."""
+    score = (-d_host if d_host is not None
+             else f_lam[np.clip(ids, 0, None)])
+    score = np.where(valid, score, -np.inf)
+    w = min(width, ids.shape[1])
+    part = np.argpartition(-score, w - 1, axis=1)[:, :w]
+    got = np.take_along_axis(ids, part, axis=1)
+    ok = np.isfinite(np.take_along_axis(score, part, axis=1))
+    return np.where(ok, got, -1)
+
+
+class _StageMap:
+    """Append-only id -> payload staging memo (speculative buffers).
+
+    Dense ``loc`` directory for O(1) vectorized lookup, doubling buffer
+    for amortized O(1) installs, and O(installed) wholesale invalidation:
+    the write-epoch check flushes the memo outright rather than patching
+    it — speculation must never serve a stale row."""
+
+    __slots__ = ("loc", "buf", "hit", "n", "_installed")
+
+    def __init__(self, capacity: int, width: int, dtype, track_hit=False):
+        self.loc = np.full((capacity,), -1, np.int64)
+        self.buf = np.empty((0, width), dtype)
+        self.hit = np.empty((0,), bool) if track_hit else None
+        self.n = 0
+        self._installed: list = []
+
+    def add(self, ids, rows, hit=None):
+        m = len(ids)
+        if not m:
+            return
+        need = self.n + m
+        if need > len(self.buf):
+            cap = max(need, 2 * len(self.buf), 256)
+            buf = np.empty((cap, self.buf.shape[1]), self.buf.dtype)
+            buf[:self.n] = self.buf[:self.n]
+            self.buf = buf
+            if self.hit is not None:
+                h = np.empty((cap,), bool)
+                h[:self.n] = self.hit[:self.n]
+                self.hit = h
+        self.buf[self.n:need] = rows
+        if self.hit is not None:
+            self.hit[self.n:need] = hit
+        self.loc[ids] = np.arange(self.n, need)
+        self._installed.append(np.asarray(ids))
+        self.n = need
+
+    def clear(self):
+        for blk in self._installed:
+            self.loc[blk] = -1
+        self._installed.clear()
+        self.n = 0
+
+
+class _SpecPipeline:
+    """Speculative double-buffered stage for the tiered arm (§4.4).
+
+    While round N's dispatch is in flight the host stages the predicted
+    round-N+1 frontier: adjacency rows for the predicted ids, vectors for
+    their neighborhoods, and an async disk prefetch one hop further. At
+    read-back, staged frontier ids feed the next dispatch immediately;
+    mispredictions cost a delta fetch of the missing rows only. Both
+    memos are validated against the store's write epoch every round — a
+    concurrent insert/delete flushes them wholesale, so speculation reads
+    are never staler than the non-speculative path's per-round fetches
+    (MVCC consistency is the store's, unchanged)."""
+
+    def __init__(self, backend, h2d, cache_vec, f_lam, *,
+                 prefetch_budget=0, probe=8):
+        self.store = backend.store
+        self.h2d, self.cache_vec, self.f_lam = h2d, cache_vec, f_lam
+        self.prefetch_budget = prefetch_budget
+        self.probe = probe
+        cap = backend.capacity
+        self.rows = _StageMap(cap, backend.degree, np.int32)
+        self.vecs = _StageMap(cap, backend.dim, np.float32, track_hit=True)
+        self.epoch = self.store.write_epoch
+        self.hits = 0
+        self.misses = 0
+
+    def validate(self):
+        ep = self.store.write_epoch
+        if ep != self.epoch:
+            self.rows.clear()
+            self.vecs.clear()
+            self.epoch = ep
+
+    def rows_for(self, uids, *, speculative=False):
+        """Adjacency rows aligned with ``uids`` (unique, >= 0): staged ids
+        come from the memo, the rest are delta-fetched and installed.
+        Demand reads (``speculative=False``) score the hit-rate."""
+        loc = self.rows.loc[uids]
+        miss = loc < 0
+        if not speculative:
+            self.hits += int((~miss).sum())
+            self.misses += int(miss.sum())
+        if miss.any():
+            mids = uids[miss]
+            self.rows.add(mids, self.store.fetch_rows(mids, self.f_lam))
+            loc = self.rows.loc[uids]
+        return self.rows.buf[loc]
+
+    def vectors_for(self, uids):
+        """(vectors [U, D], device_hit [U]) aligned with unique ids."""
+        loc = self.vecs.loc[uids]
+        miss = loc < 0
+        if miss.any():
+            mids = uids[miss]
+            v, h = _resolve_unique_vectors(mids, self.h2d, self.cache_vec,
+                                           self.store, self.f_lam)
+            self.vecs.add(mids, v, h)
+            loc = self.vecs.loc[uids]
+        return self.vecs.buf[loc], self.vecs.hit[loc]
+
+    def stage(self, pred):
+        """Speculative stage — runs while the dispatch is in flight."""
+        ids = np.unique(pred[pred >= 0])
+        if not ids.size:
+            return
+        self.validate()
+        rows = self.rows_for(ids, speculative=True)
+        nxt = np.unique(rows[rows >= 0])
+        if nxt.size:
+            self.vectors_for(nxt)
+            if self.prefetch_budget > 0:
+                self._prefetch_two_ahead(nxt)
+
+    def _prefetch_two_ahead(self, cand):
+        """Async disk prefetch one hop past the staged frontier (the old
+        predicted-prefetch, now fed by the speculative stage): peek the
+        hottest staged candidates' adjacency and enqueue their cold
+        neighbors, overlapping the round after next as well."""
+        if cand.size > self.probe:
+            cand = cand[np.argpartition(-self.f_lam[cand],
+                                        self.probe - 1)[:self.probe]]
+        hrows = self.store.peek_rows(cand)
+        nxt = np.unique(hrows[hrows >= 0])
+        nxt = nxt[self.store.loc[nxt] < 0]
+        if nxt.size:
+            b = self.prefetch_budget
+            if nxt.size > b:
+                nxt = nxt[np.argpartition(-self.f_lam[nxt], b - 1)[:b]]
+            self.store.prefetch(nxt, self.f_lam)
 
 
 def _predict_prefetch(store, nb, valid, f_lam, budget, probe=8):
-    """Predicted next-frontier prefetch (paper §4.4 multi-stream overlap):
-    the rows of this round's candidates are already window-resident (the
-    cascade promoted them), so peeking the hottest candidates' adjacency
-    is cheap; their non-resident neighbors are what the *next* round will
-    need from disk. Called while the round's device dispatch is in
-    flight, so the background disk reads overlap device compute."""
+    """Predicted next-frontier prefetch for the NON-speculative path
+    (paper §4.4 multi-stream overlap): peek the hottest candidates'
+    adjacency while the dispatch is in flight, enqueue their non-resident
+    neighbors to the background prefetcher."""
     cand = np.unique(nb[valid])
     if not cand.size:
         return
@@ -308,21 +555,49 @@ def _predict_prefetch(store, nb, valid, f_lam, budget, probe=8):
         store.prefetch(nxt, f_lam)
 
 
+def _pow2_bucket(u: int, floor: int = 512) -> int:
+    """Pad unique-row counts to power-of-FOUR buckets (512 floor) so the
+    round dispatch compiles a handful of specializations, not one per
+    count — and, as important, so steady-state serving rarely straddles a
+    bucket boundary (a mid-run boundary crossing is a fresh XLA compile
+    on the hot path, which is exactly the tail-latency spike the
+    percentile satellite hunts). Padded rows are zeros the lane->unique
+    gather never references; their transfer cost is noise."""
+    b = floor
+    while b < u:
+        b *= 4
+    return b
+
+
 def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                   *, f_lam=None, prefetch_budget: int = 0,
-                  entry_ids=None) -> TieredSearchResult:
+                  entry_ids=None, speculate: bool = True,
+                  spec_width: int = 0, spec_rank: str = "flam",
+                  spec_predict=None) -> TieredSearchResult:
     """Hop-batched frontier search over a disk-backed graph (paper
     Algorithm 1 in its GPU-CPU-disk form) — the tiered arm of the shared
-    executor. The host owns traversal and residency; each round expands a
-    beam of ``sp.beam`` frontier candidates, resolves their neighborhoods
-    through the cascade device cache -> host window -> disk in bulk, and
-    issues ONE jitted distance+merge dispatch, with the predicted next
-    frontier enqueued to the store's async prefetcher while that dispatch
-    is in flight.
+    executor, run as a two-stage speculative pipeline. Per round: ONE
+    bulk (delta) row fetch, ONE unique-id vector cascade, ONE jitted
+    distance+merge dispatch; while that dispatch is in flight the host
+    predicts the next frontier and stages its rows/vectors
+    (``_SpecPipeline``), so at the read-back sync only mispredicted ids
+    still need IO. Speculation is bitwise-transparent: staged payloads
+    are the same values the demand path would fetch (the write-epoch
+    check flushes the memo on any concurrent mutation), so results are
+    identical to ``speculate=False`` — the property suite enforces this
+    under forced 0% and 100% misprediction.
 
     backend: ``tiers.TieredBackend``; cache_mirror: ``cache.HostPlacement``
     (readers snapshot its arrays once, see HostPlacement docs).
     ``entry_ids`` [B, pool] overrides the random entry pool (parity tests).
+    ``spec_width``: predicted frontier ids staged per query per round
+    (0 -> beam). ``spec_rank``: ``"flam"`` (default) ranks round
+    predictions with the F_λ probe alone; ``"dist"`` re-ranks by exact
+    host distances over the staged unique vectors — higher hit-rate but
+    ~2ms/round of host compute, worth it only when delta fetches are
+    genuinely IO-bound (disk much slower than this pod's page cache). ``spec_predict``: prediction
+    hook with the signature of ``predict_frontier`` (tests force 0%/100%
+    misprediction through it).
     """
     store = backend.store
     alive = backend.alive
@@ -337,23 +612,45 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
     queries = np.asarray(queries, np.float32)
     B, D = queries.shape
     L, R, k = sp.pool, backend.degree, sp.k
-    beam = max(1, sp.beam)
+    beam = max(1, min(sp.beam, L))
     rounds = _n_rounds(sp)
     C = beam * R
     n = max(backend.n, 1)
+    id_bound = int(backend.capacity)
     qj = jnp.asarray(queries)
     if entry_ids is None:
         rng = np.random.default_rng(seed)
         entry_ids = rng.integers(0, n, (B, L))
     entry_ids = np.asarray(entry_ids, np.int64)
 
-    # entry pool: one cascade + one entry dispatch
-    ev, _ = _cascade_vectors(entry_ids.reshape(-1), h2d, cache_vec, store,
-                             f_lam)
+    spec = None
+    if speculate:
+        spec = _SpecPipeline(backend, h2d, cache_vec, f_lam,
+                             prefetch_budget=prefetch_budget)
+        spec.validate()
+        width = spec_width if spec_width > 0 else beam
+        predict = spec_predict if spec_predict is not None else \
+            predict_frontier
+
+    # entry pool: one unique-id cascade + one entry dispatch
+    ue, inv_e = np.unique(entry_ids.reshape(-1), return_inverse=True)
+    if spec is not None:
+        uev, _ = spec.vectors_for(ue)
+    else:
+        uev, _ = _resolve_unique_vectors(ue, h2d, cache_vec, store, f_lam)
+    ev = uev[inv_e].reshape(B, L, D)
+    entry_alive = alive[entry_ids]
     pool_ids, pool_d, visited, curr_j = _tiered_entry_dispatch(
-        jnp.asarray(entry_ids, jnp.int32), jnp.asarray(ev.reshape(B, L, D)),
-        jnp.asarray(alive[entry_ids]), qj, beam)
+        jnp.asarray(entry_ids, jnp.int32), jnp.asarray(ev),
+        jnp.asarray(entry_alive), qj, beam, id_bound)
     dispatches = 1
+    if spec is not None:
+        # stage round 1 while the entry dispatch is in flight: the entry
+        # vectors are host-resident, so the first frontier is predicted
+        # from exact host distances
+        pred = predict(entry_ids, entry_alive, f_lam, width,
+                       d_host=_host_sqdist(ev, queries))
+        spec.stage(pred)
     curr = np.asarray(curr_j)                 # [B, beam], -1 = idle lane
 
     acc_ids = np.full((B, rounds, C), -1, np.int32)
@@ -364,9 +661,14 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
         if not ok.any():
             break
         # ONE bulk row fetch for the whole beam (topology lives on
-        # host/disk only; the device cache stores vectors)
+        # host/disk only; the device cache stores vectors). Staged rows
+        # from the speculative stage short-circuit it to a delta fetch.
         ucur = np.unique(curr[ok])
-        _, urows = store.fetch(ucur, f_lam)
+        if spec is not None:
+            spec.validate()
+            urows = spec.rows_for(ucur)
+        else:
+            urows = store.fetch_rows(ucur, f_lam)
         nb = np.full((B, beam, R), -1, np.int32)
         # searchsorted over the (sorted) unique ids: O(|curr| log |ucur|),
         # no O(dataset) scratch on the per-round hot path
@@ -374,27 +676,50 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
         nb = nb.reshape(B, C)
 
         valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
-        xv, dev_hit = _cascade_vectors(nb.reshape(-1), h2d, cache_vec,
-                                       store, f_lam)
+        uc, inv = np.unique(np.where(valid, nb, 0).reshape(-1),
+                            return_inverse=True)
+        if spec is not None:
+            uvec, uhit = spec.vectors_for(uc)
+        else:
+            uvec, uhit = _resolve_unique_vectors(uc, h2d, cache_vec, store,
+                                                 f_lam)
+        U = _pow2_bucket(len(uc))
+        if U != len(uc):
+            uvec = np.concatenate(
+                [uvec, np.zeros((U - len(uc), D), np.float32)])
         # launch the round's single device dispatch (async); pool state
-        # stays device-resident, only `curr` crosses back. The prefetch
-        # prediction below overlaps with the in-flight dispatch.
+        # stays device-resident, only `curr` crosses back. The speculative
+        # stage below overlaps with the in-flight dispatch.
         pool_ids, pool_d, visited, curr_j = _tiered_round_dispatch(
-            pool_ids, pool_d, visited, jnp.asarray(nb),
-            jnp.asarray(xv.reshape(B, C, D)), jnp.asarray(valid), qj, beam)
+            pool_ids, pool_d, visited, jnp.asarray(nb), jnp.asarray(uvec),
+            jnp.asarray(inv.reshape(B, C).astype(np.int32)),
+            jnp.asarray(valid), qj, beam, id_bound)
         dispatches += 1
         acc_ids[:, it] = np.where(valid, nb, -1)
-        acc_hit[:, it] = dev_hit.reshape(B, C) & valid
-        if prefetch_budget > 0:
+        acc_hit[:, it] = uhit[inv].reshape(B, C) & valid
+        if spec is not None:
+            if it + 1 < rounds:   # the last round has no next to stage for
+                d_host = None
+                if spec_rank == "dist":
+                    # re-rank by exact host distances (the unique vectors
+                    # are already host-resident): sharper than the F_λ
+                    # probe, and the cost hides under the in-flight
+                    # dispatch like the rest of the stage
+                    d_host = _host_sqdist(
+                        uvec[inv].reshape(B, C, D), queries)
+                spec.stage(predict(nb, valid, f_lam, width, d_host=d_host))
+        elif prefetch_budget > 0:
             _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
-        curr = np.asarray(curr_j)             # sync point for the round
+        curr = np.asarray(curr_j)             # the round's only sync point
         it += 1
 
     pool_ids, pool_d = np.asarray(pool_ids), np.asarray(pool_d)
     topk_ids = np.where(np.isfinite(pool_d[:, :k]), pool_ids[:, :k], -1)
     return TieredSearchResult(topk_ids.astype(np.int32), pool_d[:, :k],
                               acc_ids.reshape(B, -1),
-                              acc_hit.reshape(B, -1), it, dispatches)
+                              acc_hit.reshape(B, -1), it, dispatches,
+                              spec.hits if spec else 0,
+                              spec.misses if spec else 0)
 
 
 def brute_force_topk(graph: GraphState, queries, k):

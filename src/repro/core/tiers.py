@@ -125,6 +125,36 @@ class TieredStore:
                 out_n[~hit] = dn
             return out_v, out_n
 
+    def fetch_rows(self, ids: np.ndarray,
+                   f_lambda: Optional[np.ndarray] = None, *,
+                   count: bool = True):
+        """Adjacency-only ``fetch`` (the speculative pipeline's delta-fetch
+        API): window hits skip the vector copy entirely; misses read both
+        halves from disk — the promotion install needs the vectors anyway
+        — and promote exactly like ``fetch``. Returns nbr rows, a copy."""
+        ids = np.asarray(ids)
+        with self._lock:
+            out_n = np.empty((len(ids), self.disk.degree), np.int32)
+            slots = self.loc[ids]
+            hit = slots >= 0
+            if count:
+                self.hits += int(hit.sum())
+                self.misses += int((~hit).sum())
+            out_n[hit] = self.host_nbr[slots[hit]]
+            miss_ids = ids[~hit]
+            if miss_ids.size:
+                dv, dn = self.disk.read(miss_ids)
+                out_n[~hit] = dn
+                self._promote(miss_ids, dv, dn, f_lambda)
+            return out_n
+
+    @property
+    def write_epoch(self) -> int:
+        """Monotone write counter (reading an int is atomic under the
+        GIL): speculative staging snapshots it and flushes its memos when
+        it moves — a staged row must never outlive a concurrent write."""
+        return self._write_epoch
+
     def peek_rows(self, ids: np.ndarray):
         """Adjacency-only ``peek``: rows through the window overlay
         without promotion, counters, or the vector copy. The MVCC

@@ -72,6 +72,22 @@ class RAGPipeline:
         return [[self.docs[int(i)] for i in row[:k] if int(i) in self.docs]
                 for row in ids]
 
+    def retrieve_many(self, prompt_batches: list, k=4) -> list:
+        """Pipelined retrieval for independently-arriving prompt batches:
+        every batch is submitted to the engine's cross-query coalescing
+        scheduler up front, so requests that arrive within the adaptive
+        window share ONE executor invocation (embedding of batch i+1
+        overlaps the in-flight search of batch i as a bonus). Returns one
+        ``retrieve_batch``-shaped list per input batch."""
+        futs = [self.index.submit_search(self.embed(toks))
+                for toks in prompt_batches]
+        out = []
+        for fut in futs:
+            ids, _ = fut.result()
+            out.append([[self.docs[int(i)] for i in row[:k]
+                         if int(i) in self.docs] for row in ids])
+        return out
+
     def augment(self, prompt_tokens: np.ndarray, k=4, budget=128):
         """Prepend retrieved chunks (truncated to the context budget)."""
         docs = self.retrieve(prompt_tokens, k)

@@ -56,6 +56,11 @@ def test_tiered_engine_search_recall(tmp_path, dataset):
         st = eng.stats()
         assert st["disk_reads"] > 0 and st["host_hits"] > 0
         assert st["accesses"] == st["hits"] + st["misses"]
+        # speculative-pipeline + coalescer accounting surfaces in stats()
+        assert st["spec_hits"] + st["spec_misses"] > 0
+        assert 0.0 <= st["spec_hit_rate"] <= 1.0
+        assert st["coalesce_dispatches"] >= 1
+        assert st["coalesce_batch_mean"] >= 1.0
     finally:
         eng.close()
 
