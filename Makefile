@@ -3,12 +3,16 @@
 #   make verify      — the tier-1 suite (ROADMAP.md)
 #   make bench-disk  — the three-tier serving benchmark (fig. 11)
 #   make bench-smoke — seconds-scale disk-backed serving bench (CI gate:
-#                      catches serving-path regressions unit tests miss)
+#                      catches serving-path regressions unit tests miss);
+#                      runs the exact-mode AND PQ-on configs, each gated
+#                      against its own config-key history
+#   make bench-scale — >=10x memmap-built scale-up preset (PQ code lane,
+#                      per-tier byte footprints; minutes-scale, not CI)
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-disk bench-smoke
+.PHONY: verify test bench-disk bench-smoke bench-scale
 
 verify:
 	$(PY) -m pytest -x -q
@@ -20,3 +24,7 @@ bench-disk:
 
 bench-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --smoke --gate
+	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --smoke --gate --pq
+
+bench-scale:
+	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --scale --gate

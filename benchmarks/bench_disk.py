@@ -15,10 +15,17 @@ off vs on.
 
 Every run appends a machine-readable entry to
 ``results/pod256/bench_disk.json`` so the bench trajectory is trackable
-across PRs. ``--smoke`` runs a seconds-scale variant for CI; ``--gate``
-compares the fresh entry against the previous comparable one and fails
-on a >20% search-QPS regression or a >0.02 recall drop, so perf changes
-are gated mechanically (``make bench-smoke``).
+across PRs (rotated: at most ``keep_per_key`` entries stay per config
+key, the overflow archives under ``results/pod256/archive/``).
+``--smoke`` runs a seconds-scale variant for CI; ``--gate`` compares the
+fresh entry against the previous entry with the SAME config key (shape +
+window + PQ mode — a PQ-on run never gates against an exact-mode
+baseline) and fails on a >20% search-QPS regression or a >0.02 recall
+drop, so perf changes are gated mechanically (``make bench-smoke`` runs
+the exact-mode AND PQ-on smoke configs). ``--pq`` serves through the
+device-resident PQ code lane (quant.py: ADC scan + tier-cascade exact
+re-rank); ``--scale`` runs the ≥10x memmap-built scale-up preset with PQ
+on and records per-tier byte footprints.
 """
 from __future__ import annotations
 
@@ -44,8 +51,25 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results", "pod256")
 
 
-def _append_result(entry: dict, path=None):
-    """Append one run entry to the pod256 trajectory file (JSON list)."""
+def config_key(meta: dict) -> str:
+    """Comparability key for bench entries: two runs gate against each
+    other only when dataset shape, window fraction and PQ mode all match
+    (a PQ-on run must never gate against an exact-mode baseline, nor a
+    scale run against the toy sample). Entries written before this key
+    existed lack the pq/scale fields; the defaults make their computed
+    key equal to a fresh exact-mode run of the same shape, so history
+    stays comparable across the cutover."""
+    return ("smoke{}-n{}-d{}-w{}-pq{}-scale{}".format(
+        int(bool(meta.get("smoke"))), meta.get("n"), meta.get("dim"),
+        meta.get("window_frac", 4), int(bool(meta.get("pq"))),
+        int(bool(meta.get("scale")))))
+
+
+def _append_result(entry: dict, path=None, keep_per_key: int = 10):
+    """Append one run entry to the pod256 trajectory file (JSON list),
+    rotating old entries out: at most ``keep_per_key`` entries stay per
+    config key (append-only growth was unbounded); the overflow moves to
+    ``results/pod256/archive/`` so the full history survives."""
     path = path or os.path.join(RESULTS_DIR, "bench_disk.json")
     os.makedirs(os.path.dirname(path), exist_ok=True)
     hist = []
@@ -56,26 +80,48 @@ def _append_result(entry: dict, path=None):
         except (json.JSONDecodeError, OSError):
             hist = []
     hist.append(entry)
+    # rotate: keep the newest keep_per_key per key, archive the rest
+    counts: dict = {}
+    keep, archived = [], []
+    for e in reversed(hist):
+        k = config_key(e.get("meta", {}))
+        counts[k] = counts.get(k, 0) + 1
+        (keep if counts[k] <= keep_per_key else archived).append(e)
+    keep.reverse()
+    archived.reverse()
+    if archived:
+        apath = os.path.join(os.path.dirname(path), "archive",
+                             os.path.basename(path))
+        os.makedirs(os.path.dirname(apath), exist_ok=True)
+        old = []
+        if os.path.exists(apath):
+            try:
+                with open(apath) as f:
+                    old = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                old = []
+        with open(apath, "w") as f:
+            json.dump(old + archived, f, indent=2, sort_keys=True)
     with open(path, "w") as f:
-        json.dump(hist, f, indent=2, sort_keys=True)
+        json.dump(keep, f, indent=2, sort_keys=True)
     return path
 
 
 def check_gate(path=None, qps_tolerance=0.2, recall_tolerance=0.02):
     """Mechanical perf gate: compare the newest entry against the previous
-    one with the same (smoke, n, dim) config. Returns a list of failure
-    strings (empty = pass); no comparable predecessor passes trivially."""
+    one with the same config key (``config_key`` — shape + window + PQ
+    mode). Returns a list of failure strings (empty = pass); no comparable
+    predecessor passes trivially."""
     path = path or os.path.join(RESULTS_DIR, "bench_disk.json")
     with open(path) as f:
         hist = json.load(f)
     if len(hist) < 2:
         return []
     new = hist[-1]
-    key = {k: new["meta"].get(k) for k in ("smoke", "n", "dim")}
+    key = config_key(new.get("meta", {}))
     prev = None
     for e in reversed(hist[:-1]):
-        if all(e.get("meta", {}).get(k) == v for k, v in key.items()) \
-                and "tiered_serving" in e:
+        if config_key(e.get("meta", {})) == key and "tiered_serving" in e:
             prev = e
             break
     if prev is None:
@@ -182,34 +228,57 @@ def _miss_rate_probe(vecs, sp, seed, *, batches, query_batch, window,
 
 
 def _streaming_tiered(vecs, sp, results, seed, rounds=6, insert_chunk=128,
-                      query_batch=64, meas_batches=24):
-    """(c) end-to-end three-tier serving: dataset ≥4x the host window."""
+                      query_batch=64, meas_batches=24, pq=False,
+                      sweep=True, probe_ablation=True, engine_kw=None):
+    """(c) end-to-end three-tier serving: dataset ≥4x the host window.
+    ``pq=True`` serves through the device-resident code lane (ADC scan +
+    tier-cascade exact re-rank) and records the per-tier byte footprint.
+    ``sweep``/``probe_ablation`` gate the auxiliary measurements (the
+    scale preset skips them — its point is footprint, not concurrency)."""
     rng = np.random.default_rng(seed + 1)
     n, dim = vecs.shape
     n_seed = n // 2                       # half preloaded, rest streamed in
-    n_final = n_seed + rounds * insert_chunk
+    # one untimed warmup insert round precedes the timed rounds (see
+    # cold-start below), so the streamed total is rounds+1 chunks
+    n_final = n_seed + (rounds + 1) * insert_chunk
     window = n_final // 4                 # dataset is >=4x the host window
     with tempfile.TemporaryDirectory() as td:
-        eng = SVFusionEngine(vecs[:n_seed], EngineConfig(
-            degree=16, cache_slots=512, capacity=2 * n,
-            disk_path=td, disk_capacity=2 * n, host_window=window,
-            search=sp, seed=seed))
+        # m = dim/2 keeps the device code footprint at exactly
+        # m/(4·dim) = 1/8 of full-coverage fp32 across bench dims
+        # (m=16 at the flagship dim=32); engine_kw overrides win
+        cfg_kw = dict(degree=16, cache_slots=512, capacity=2 * n,
+                      disk_path=td, disk_capacity=2 * n,
+                      host_window=window, search=sp, seed=seed,
+                      pq_enabled=pq, pq_m=dim // 2)
+        cfg_kw.update(engine_kw or {})
+        eng = SVFusionEngine(vecs[:n_seed], EngineConfig(**cfg_kw))
         try:
             # cold-start warmup (paper §4.4): compile the executor's
             # dispatch pipeline at serving shape AND let the placement
             # tiers converge before the timed loop, so QPS reflects
             # steady-state serving, not one-time jit compile or the
-            # cache's cold-start churn
+            # cache's cold-start churn. One warmup INSERT round is part
+            # of it: the insert path's candidate search compiles at the
+            # chunk batch size (and, PQ mode, the incremental-encode +
+            # post-insert bucket shapes) — without it those one-time
+            # compiles land in the first timed interleaved batches and
+            # the 2-6-batch interleaved QPS reads ~5x low
             t0 = time.perf_counter()
-            for _ in range(6):
+            mirror_ids = list(range(n_seed))
+            cursor = n_seed
+            for _ in range(3):
+                eng.search(rng.normal(size=(query_batch, dim))
+                           .astype(np.float32))
+            warm_ids = eng.insert(vecs[cursor:cursor + insert_chunk])
+            mirror_ids.extend(int(i) for i in warm_ids)
+            cursor += len(warm_ids)
+            for _ in range(3):
                 eng.search(rng.normal(size=(query_batch, dim))
                            .astype(np.float32))
             cold_start_s = time.perf_counter() - t0
-            mirror_ids = list(range(n_seed))
             recs, s_lat, i_lat = [], [], []
             n_q = n_i = 0
             n_interleaved = 0
-            cursor = n_seed
             for _ in range(rounds):
                 part = vecs[cursor:cursor + insert_chunk]
                 if len(part):
@@ -251,7 +320,7 @@ def _streaming_tiered(vecs, sp, results, seed, rounds=6, insert_chunk=128,
             # fix is the raised sample count, which puts p95 and p99 in
             # different batches
             pq_ms = np.asarray(s_lat) / query_batch * 1e3
-            sweep = _concurrency_sweep(eng, dim, rng)
+            sweep_out = _concurrency_sweep(eng, dim, rng) if sweep else None
             out = {
                 "recall": float(np.mean(recs)),
                 "search_qps": n_q / max(sum(s_lat), 1e-9),
@@ -269,8 +338,8 @@ def _streaming_tiered(vecs, sp, results, seed, rounds=6, insert_chunk=128,
                 "rounds_per_query": st["search_rounds_per_batch"],
                 "dispatches_per_query": st["search_dispatches_per_batch"],
                 "spec_hit_rate": st["spec_hit_rate"],
+                "spec_rank_resolved": st.get("spec_rank_resolved"),
                 "coalesce_batch_mean": st["coalesce_batch_mean"],
-                "qps_vs_streams": sweep,
                 "cold_start_s": cold_start_s,
                 "beam": sp.beam,
                 "hop_budget": sp.max_iters,
@@ -282,24 +351,38 @@ def _streaming_tiered(vecs, sp, results, seed, rounds=6, insert_chunk=128,
                 "prefetched": st["prefetched"],
                 "window_over_dataset": window / cursor,
             }
+            if sweep_out is not None:
+                out["qps_vs_streams"] = sweep_out
+            # per-tier byte footprint (ISSUE acceptance: device codes at
+            # <= 1/8 of the exact full-coverage fp32 equivalent)
+            out["bytes_per_tier"] = st["bytes_per_tier"]
+            out["device_exact_equiv_bytes"] = st["device_exact_equiv_bytes"]
+            if pq:
+                out["device_vector_bytes"] = st["device_vector_bytes"]
+                out["device_footprint_ratio"] = st["device_footprint_ratio"]
+                out["pq_m"] = st["pq_m"]
+                out["pq_bits"] = st["pq_bits"]
+                out["rerank_depth"] = st["rerank_depth"]
+                out["pq_encoded_incremental"] = st["pq_encoded_incremental"]
             assert cursor >= 4 * window    # larger-than-window guarantee
         finally:
             eng.close()
-    # paired ablation: the same search workload with the cascade-promote
-    # rule off (the pre-fix clock freeze) vs on — before/after miss rate
-    probe = dict(batches=max(8, rounds + meas_batches // 2),
-                 query_batch=query_batch, window=window)
-    out["device_miss_rate_cascade_promote_off"] = _miss_rate_probe(
-        vecs[:n_seed], sp, seed, cascade_promote=False, **probe)
-    out["device_miss_rate_cascade_promote_on"] = _miss_rate_probe(
-        vecs[:n_seed], sp, seed, cascade_promote=True, **probe)
+    if probe_ablation:
+        # paired ablation: the same search workload with the cascade-
+        # promote rule off (the pre-fix clock freeze) vs on
+        probe = dict(batches=max(8, rounds + meas_batches // 2),
+                     query_batch=query_batch, window=window)
+        out["device_miss_rate_cascade_promote_off"] = _miss_rate_probe(
+            vecs[:n_seed], sp, seed, cascade_promote=False, **probe)
+        out["device_miss_rate_cascade_promote_on"] = _miss_rate_probe(
+            vecs[:n_seed], sp, seed, cascade_promote=True, **probe)
     csv_row("fig11_tiered_serving", 0.0, **{
-        k: v for k, v in out.items() if not isinstance(v, list)})
+        k: v for k, v in out.items() if not isinstance(v, (list, dict))})
     results["tiered_serving"] = out
 
 
 def main(n=6000, dim=32, seed=0, *, smoke=False, recall_bar=0.8,
-         gate=False):
+         gate=False, pq=False):
     rng = np.random.default_rng(seed)
     vecs = rng.normal(size=(n, dim)).astype(np.float32)
     queries = rng.normal(size=(64, dim)).astype(np.float32)
@@ -311,13 +394,78 @@ def main(n=6000, dim=32, seed=0, *, smoke=False, recall_bar=0.8,
                       rounds=2 if smoke else 6,
                       insert_chunk=64 if smoke else 128,
                       query_batch=32 if smoke else 64,
-                      meas_batches=20 if smoke else 24)
+                      meas_batches=20 if smoke else 24,
+                      pq=pq)
     results["meta"] = {"n": n, "dim": dim, "seed": seed, "smoke": smoke,
+                       "pq": pq, "scale": False, "window_frac": 4,
                        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
     path = _append_result(results)
-    print(f"bench_disk: appended run entry to {path}", flush=True)
+    print(f"bench_disk: appended run entry to {path} "
+          f"(key {config_key(results['meta'])})", flush=True)
     assert results["tiered_serving"]["recall"] >= recall_bar, \
         f"three-tier recall@10 below bar: {results['tiered_serving']}"
+    if gate:
+        fails = check_gate(path)
+        if fails:
+            for f in fails:
+                print(f"bench gate FAIL: {f}", file=sys.stderr)
+            raise SystemExit(1)
+        print("bench gate: pass (no >20% QPS / >0.02 recall regression)")
+    return results
+
+
+def _memmap_dataset(path, n, dim, seed, chunk=8192):
+    """Build the scale dataset memmap-backed, never holding it all in
+    RAM (the whole point of the preset: the data layout is the one the
+    disk tier serves, only a chunk's worth of rows transits memory)."""
+    mm = np.memmap(path, np.float32, "w+", shape=(n, dim))
+    rng = np.random.default_rng(seed)
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        mm[s:e] = rng.normal(size=(e - s, dim)).astype(np.float32)
+    mm.flush()
+    return mm
+
+
+def main_scale(n=60000, dim=32, seed=0, *, recall_bar=0.9, gate=False):
+    """Scale-up preset (`--scale`): a dataset ≥10x the default sample,
+    memmap-built, served through the PQ code lane — the ROADMAP "beyond
+    toy sizes" item. The device codes (n·m bytes) give full-coverage
+    device-side distance evaluation where fp32 vectors (n·D·4) would not
+    fit the device budget; per-tier byte footprints land in the entry.
+    Skips the build comparison, concurrency sweep and miss-rate ablation:
+    this preset measures footprint + serving at scale, nothing else.
+
+    Graph/search knobs scale with the dataset (the toy sample's
+    degree=16 / pool=64 / 96 hops drop to ~0.4 recall at 30k live
+    vectors on random gaussian data): degree 32, partitioned build with
+    1024 cross-partition candidate columns, pool 128, 256-hop budget at
+    beam 32, re-rank depth 48."""
+    sp = SearchParams(k=10, pool=128, max_iters=256, beam=32)
+    results = {}
+    with tempfile.TemporaryDirectory() as td:
+        vecs = _memmap_dataset(os.path.join(td, "scale.f32"), n, dim, seed)
+        _streaming_tiered(
+            vecs, sp, results, seed, rounds=2, insert_chunk=256,
+            query_batch=64, meas_batches=8, pq=True, sweep=False,
+            probe_ablation=False,
+            # partitioned build: the monolithic O(n^2) GEMM at this n
+            # would dominate the preset's runtime (and its memory is the
+            # bounded-window story the paper tells anyway)
+            engine_kw={"build_partitions": 4, "build_cross_samples": 1024,
+                       "degree": 32, "rerank_depth": 48})
+    results["meta"] = {"n": n, "dim": dim, "seed": seed, "smoke": False,
+                       "pq": True, "scale": True, "window_frac": 4,
+                       "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
+    path = _append_result(results)
+    ts = results["tiered_serving"]
+    print(f"bench_disk --scale: appended run entry to {path} "
+          f"(key {config_key(results['meta'])})", flush=True)
+    print(f"  bytes_per_tier: {ts['bytes_per_tier']}", flush=True)
+    print(f"  device_footprint_ratio: {ts['device_footprint_ratio']:.4f} "
+          f"(codes vs full-coverage fp32)", flush=True)
+    assert ts["recall"] >= recall_bar, \
+        f"scale recall@10 below bar: {ts['recall']}"
     if gate:
         fails = check_gate(path)
         if fails:
@@ -336,11 +484,20 @@ if __name__ == "__main__":
     ap.add_argument("--gate", action="store_true",
                     help="fail on >20%% QPS or >0.02 recall regression "
                          "vs the previous comparable entry")
+    ap.add_argument("--pq", action="store_true",
+                    help="serve through the PQ code lane (device-resident "
+                         "ADC scan + tier-cascade exact re-rank)")
+    ap.add_argument("--scale", action="store_true",
+                    help="scale-up preset: >=10x dataset, memmap-built, "
+                         "PQ on, per-tier byte footprints recorded")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--dim", type=int, default=None)
     args = ap.parse_args()
-    if args.smoke:
+    if args.scale:
+        main_scale(n=args.n or 60000, dim=args.dim or 32, gate=args.gate)
+    elif args.smoke:
         main(n=args.n or 1200, dim=args.dim or 16, smoke=True,
-             recall_bar=0.7, gate=args.gate)
+             recall_bar=0.7, gate=args.gate, pq=args.pq)
     else:
-        main(n=args.n or 6000, dim=args.dim or 32, gate=args.gate)
+        main(n=args.n or 6000, dim=args.dim or 32, gate=args.gate,
+             pq=args.pq)

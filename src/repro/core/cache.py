@@ -201,6 +201,12 @@ class HostPlacement:
     snapshot — without the engine's cache lock; the update pass builds
     fresh arrays and publishes them through one ``view`` assignment, so a
     concurrent reader sees a consistent (possibly one-batch stale) pair.
+
+    Division of labor with the PQ code lane (``quant.PQCodes``): WAVP
+    manages EXACT-vector slots only — the scarce fp32 payload the
+    re-rank stage reads. PQ codes are ~D·4/m times smaller and therefore
+    unconditionally device-resident; they never compete for these slots
+    and never appear in the placement pass.
     """
 
     def __init__(self, n_ids: int, n_slots: int, dim: int, *, theta=1.0,
@@ -220,6 +226,12 @@ class HostPlacement:
     @property
     def n_slots(self) -> int:
         return self.vectors.shape[0]
+
+    @property
+    def vector_bytes(self) -> int:
+        """Device-resident exact-vector payload (the WAVP-managed slots;
+        per-tier footprint reporting in ``engine.stats()``)."""
+        return int(self.vectors.nbytes)
 
     def scores(self, e_in):
         return f_lambda_np(self.f_recent, e_in, self.alpha, self.beta)

@@ -61,14 +61,37 @@ class EngineConfig:
     # -- speculative pipeline + cross-query coalescing (paper §4.4) --
     speculate: bool = True               # two-stage speculative tiered arm
     spec_width: int = 0                  # staged guesses/query (0 -> beam)
-    spec_rank: str = "flam"              # frontier predictor: flam | dist
-    #                                      (dist: exact host re-rank — wins
-    #                                      only when delta fetches are
-    #                                      genuinely IO-bound, see ROADMAP)
+    spec_rank: str = "auto"              # frontier predictor: auto | flam |
+    #                                      dist. "dist" (exact host re-rank)
+    #                                      wins only when delta fetches are
+    #                                      genuinely IO-bound; "auto" probes
+    #                                      the disk tier's per-row fetch
+    #                                      latency at startup and picks —
+    #                                      ROADMAP records the right default
+    #                                      flips between page-cache-backed
+    #                                      and real-SSD deployments.
+    spec_auto_threshold_us: float = 20.0  # per-row latency above which
+    #                                      "auto" resolves to "dist"
     coalesce: bool = True                # adaptive cross-query micro-batching
     coalesce_max_batch: int = 256        # max queries per merged dispatch
     coalesce_window: float = 2e-3        # max adaptive coalescing wait (s)
     wavp_cascade_promote: bool = True    # cascade hits displace frozen slots
+    # -- PQ code lane (quant.py): device-resident ADC scan + exact re-rank
+    pq_enabled: bool = False             # coarse-then-refine tiered search
+    pq_m: int = 16                       # subspaces (largest divisor of dim
+    #                                      <= this is used; codes are m
+    #                                      bytes/vector vs dim*4 exact)
+    pq_bits: int = 8                     # bits/code (K = 2^bits centroids)
+    pq_train_iters: int = 20             # Lloyd sweeps at index time
+    pq_train_sample: int = 4096          # codebook training sample rows
+    rerank_depth: int = 32               # pool entries exactly re-ranked
+    #                                      through the cascade (0 -> pool;
+    #                                      == pool pins exact-path parity)
+    build_partitions: int = 1            # partitioned graph build (bounded
+    #                                      memory window; used by --scale)
+    build_cross_samples: int = 128       # cross-partition candidate columns
+    #                                      per partition (graph quality at
+    #                                      scale hinges on this)
 
 
 class _SearchFuture:
@@ -249,7 +272,14 @@ class SVFusionEngine:
         self._backend = None                   # TieredBackend in 3-tier mode
         self._placement = None                 # HostPlacement in 3-tier mode
         self._rng = np.random.default_rng(cfg.seed)
+        self._spec_rank = cfg.spec_rank    # resolved by the tiered probe
+        self._spec_probe_us = None
         init_vectors = np.asarray(init_vectors, np.float32)
+        if cfg.pq_enabled and not cfg.disk_path:
+            raise ValueError(
+                "pq_enabled requires the three-tier mode (set disk_path): "
+                "the PQ code lane rides the tiered executor; device mode "
+                "would silently serve exact fp32 instead")
         if cfg.disk_path:
             self._init_tiered(init_vectors, cfg)
         else:
@@ -286,8 +316,38 @@ class SVFusionEngine:
         cap = cfg.disk_capacity or cfg.capacity
         self._backend = build_tiered_backend(
             init_vectors, cfg.degree, cfg.disk_path, disk_capacity=cap,
-            host_window=cfg.host_window, seed=cfg.seed)
+            host_window=cfg.host_window, seed=cfg.seed,
+            n_partitions=cfg.build_partitions,
+            cross_samples=cfg.build_cross_samples)
         self._placement = Cache.HostPlacement(cap, cfg.cache_slots, dim)
+        if cfg.pq_enabled:
+            # codebook build at index time: train per-subspace Lloyd
+            # codebooks on a sample, encode the whole seed set, attach
+            # the unconditionally resident code lane
+            from repro.core import quant
+            m = quant.choose_m(dim, cfg.pq_m)
+            cb = quant.train_codebook(
+                init_vectors, m, cfg.pq_bits, iters=cfg.pq_train_iters,
+                sample=cfg.pq_train_sample, seed=cfg.seed)
+            self._backend.attach_pq(quant.PQCodes(
+                cb, cap, codes=quant.encode(cb, init_vectors)))
+        # spec_rank="auto": probe the disk tier's per-row delta-fetch
+        # latency once and pick the frontier predictor from it (the right
+        # default flips between page-cache-backed and real-SSD tiers).
+        # Without speculation the predictor is dead state — skip the
+        # probe, which costs a flush + page-cache eviction of probed
+        # ranges the first search batches would have hit warm.
+        if cfg.spec_rank == "auto":
+            if cfg.speculate:
+                from repro.core.tiers import probe_fetch_latency
+                self._spec_probe_us = probe_fetch_latency(self._backend,
+                                                          seed=cfg.seed)
+                self._spec_rank = ("dist" if self._spec_probe_us
+                                   >= cfg.spec_auto_threshold_us
+                                   else "flam")
+            else:
+                self._spec_rank = "flam"   # predictor unused; stats must
+                #                            still report a concrete one
         # cold-start warm-up (paper §4.4): preload top-E_in rows
         warm_n = min(cfg.cache_slots, n)
         score = np.where(self._backend.alive[:n],
@@ -409,7 +469,9 @@ class SVFusionEngine:
             prefetch_budget=(self.cfg.prefetch_budget if self.cfg.prefetch
                              else 0),
             speculate=self.cfg.speculate, spec_width=self.cfg.spec_width,
-            spec_rank=self.cfg.spec_rank)
+            spec_rank=self._spec_rank,
+            pq=(backend.pq if self.cfg.pq_enabled else None),
+            rerank_depth=self.cfg.rerank_depth)
         if Bp != B:   # drop pad lanes from results AND placement logs
             res = res._replace(ids=res.ids[:B], dists=res.dists[:B],
                                acc_ids=res.acc_ids[:B],
@@ -667,7 +729,35 @@ class SVFusionEngine:
             d["spec_hit_rate"] = (self._spec_hits
                                   / max(self._spec_hits
                                         + self._spec_misses, 1))
+            d["spec_rank_resolved"] = self._spec_rank
+            if self._spec_probe_us is not None:
+                d["spec_probe_us_per_row"] = self._spec_probe_us
             dim = self._backend.dim
+            # per-tier byte footprint: PQ codes give FULL-coverage device
+            # distance evaluation in n·m bytes where the exact lane would
+            # need n·D·4 device-resident — the acceptance ratio below
+            bpt = self._backend.bytes_per_tier()
+            bpt["device_exact_cache"] = self._placement.vector_bytes
+            d["bytes_per_tier"] = bpt
+            n_live = max(int(self._backend.n), 1)
+            d["device_exact_equiv_bytes"] = n_live * dim * 4
+            if self._backend.pq is not None:
+                # TOTAL device vector residency (codes + exact-vector
+                # cache); the ratio compares the full-coverage distance
+                # lane alone (codes) against its fp32 equivalent — the
+                # WAVP cache is identical in both modes and cancels
+                d["device_vector_bytes"] = (bpt["device_codes"]
+                                            + bpt["device_exact_cache"])
+                d["device_footprint_ratio"] = (
+                    bpt["device_codes"] / d["device_exact_equiv_bytes"])
+                d["pq_m"] = self._backend.pq.m
+                d["pq_bits"] = self._backend.pq.bits
+                # the EFFECTIVE depth (search_tiered clamps to [k, pool]),
+                # not the raw knob — bench entries must record what ran
+                sp = self.cfg.search
+                d["rerank_depth"] = (sp.pool if self.cfg.rerank_depth <= 0
+                                     else max(sp.k, min(self.cfg.rerank_depth,
+                                                        sp.pool)))
         else:
             d["n"] = int(st.graph.n)
             d["alive"] = int(st.graph.alive.sum())

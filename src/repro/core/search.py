@@ -46,8 +46,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quant import adc_lut
 from repro.core.types import CacheState, GraphState, IndexState, SearchParams
-from repro.kernels.ops import gather_l2
+from repro.kernels.ops import adc_gather, gather_l2
 
 INF = jnp.float32(jnp.inf)
 
@@ -331,6 +332,64 @@ def _tiered_round_dispatch(pool_ids, pool_d, visited, cand_ids, uniq_vecs,
     return pool_ids, pool_d, visited, curr
 
 
+# ---------------------------------------------------------------------------
+# PQ code lane (quant.py): ADC dispatches over device-resident codes.
+# Rounds never fetch vectors through the tier cascade — only adjacency
+# rows cross tiers — and a final re-rank stage pulls exact vectors for
+# the top pool entries through the cascade.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("beam", "id_bound"))
+def _pq_entry_dispatch(entry_ids, entry_valid, codes, centroids, queries,
+                       beam, id_bound):
+    """Entry-pool ADC scan + dedup + sort + first frontier selection —
+    the code-lane twin of ``_tiered_entry_dispatch``. Builds the per-query
+    ADC lookup tables in the same dispatch and returns them for reuse by
+    every later round (the LUT is the only query-dependent PQ state)."""
+    lut = adc_lut(centroids, queries)
+    d = adc_gather(codes, lut, entry_ids)
+    d = jnp.where(entry_valid, d, INF)
+    pool_ids, pool_d, visited = init_pool(entry_ids, d, id_bound)
+    curr, visited = select_frontier(pool_ids, pool_d, visited, beam)
+    return pool_ids, pool_d, visited, curr, lut
+
+
+@partial(jax.jit, static_argnames=("beam", "id_bound"))
+def _pq_round_dispatch(pool_ids, pool_d, visited, cand_ids, cand_valid,
+                       codes, lut, beam, id_bound):
+    """ONE jitted code-gather + ADC + topk-merge (+ next frontier
+    selection) dispatch covering every hop in the round's beam. Unlike
+    the exact lane's ``_tiered_round_dispatch`` the host ships NOTHING
+    per round — candidates are scored from the unconditionally resident
+    codes, so per-round cross-tier traffic is adjacency rows only."""
+    d = adc_gather(codes, lut, cand_ids)
+    d = jnp.where(cand_valid, d, INF)
+    pool_ids, pool_d, visited = merge_round(pool_ids, pool_d, visited,
+                                            cand_ids, d, id_bound)
+    curr, visited = select_frontier(pool_ids, pool_d, visited, beam)
+    return pool_ids, pool_d, visited, curr
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _pq_rerank_dispatch(top_ids, uniq_vecs, cand_inv, valid, queries, k):
+    """Tier-cascade exact re-rank: the top ``depth`` ADC-ranked pool
+    entries, their exact vectors fetched through the cascade by the host
+    (shipped as unique rows + lane->unique map, like the exact round
+    dispatch), re-scored with the same ``_batch_sqdist`` the exact lane
+    uses and re-sorted. At ``depth == pool`` this makes the PQ lane's
+    output identical to the exact executor's whenever the traversal
+    visited the same pool (pinned by the parity suite with a lossless
+    codebook)."""
+    xv = uniq_vecs[cand_inv]                       # [B, depth, D]
+    d = _batch_sqdist(xv, queries)
+    d = jnp.where(valid, d, INF)
+    nd, order = jax.lax.top_k(-d, d.shape[1])
+    ids = jnp.take_along_axis(top_ids, order, axis=1)
+    ds = -nd
+    ids = jnp.where(jnp.isfinite(ds), ids, -1)
+    return ids[:, :k], ds[:, :k]
+
+
 def dedup_mask(a):
     """Per-row duplicate flags for an int array [B, C] (any one occurrence
     survives). Host twin of ``dup_mask_jnp``; shared by the tiered update
@@ -459,11 +518,14 @@ class _SpecPipeline:
     (MVCC consistency is the store's, unchanged)."""
 
     def __init__(self, backend, h2d, cache_vec, f_lam, *,
-                 prefetch_budget=0, probe=8):
+                 prefetch_budget=0, probe=8, stage_vectors=True):
         self.store = backend.store
         self.h2d, self.cache_vec, self.f_lam = h2d, cache_vec, f_lam
         self.prefetch_budget = prefetch_budget
         self.probe = probe
+        self.stage_vectors = stage_vectors   # False: PQ code lane — rounds
+        #                                      never need vectors, stage
+        #                                      rows (+ disk prefetch) only
         cap = backend.capacity
         self.rows = _StageMap(cap, backend.degree, np.int32)
         self.vecs = _StageMap(cap, backend.dim, np.float32, track_hit=True)
@@ -513,10 +575,12 @@ class _SpecPipeline:
         self.validate()
         rows = self.rows_for(ids, speculative=True)
         nxt = np.unique(rows[rows >= 0])
-        if nxt.size:
+        if not nxt.size:
+            return
+        if self.stage_vectors:
             self.vectors_for(nxt)
-            if self.prefetch_budget > 0:
-                self._prefetch_two_ahead(nxt)
+        if self.prefetch_budget > 0:
+            self._prefetch_two_ahead(nxt)
 
     def _prefetch_two_ahead(self, cand):
         """Async disk prefetch one hop past the staged frontier (the old
@@ -555,6 +619,30 @@ def _predict_prefetch(store, nb, valid, f_lam, budget, probe=8):
         store.prefetch(nxt, f_lam)
 
 
+def _ship_unique_vectors(ids, valid, resolve, pad_to=None):
+    """The executor's ship-unique protocol, shared by the exact round
+    dispatch and the PQ re-rank stage: dedup a [B, C] id matrix (invalid
+    lanes collapse onto placeholder id 0 — their distances are masked in
+    the dispatch), resolve vectors for the unique ids through
+    ``resolve`` (cascade or speculative memo), and zero-pad the device
+    transfer — to the pow4 bucket by default (O(log) compile
+    specializations), or to the STATIC ``pad_to`` (>= B·C suffices,
+    unique counts cannot exceed the lane count). The re-rank stage uses
+    the static pad: it runs once per query batch and its unique count
+    rides the 512/2048 bucket boundary as the dataset streams, which
+    used to drop a fresh XLA compile into the serving path right after
+    inserts. Returns (uvec [U, D], uhit [len(uc)], inv [B, C] int32)."""
+    B, C = ids.shape
+    uc, inv = np.unique(np.where(valid, ids, 0).reshape(-1),
+                        return_inverse=True)
+    uvec, uhit = resolve(uc)
+    U = pad_to if pad_to is not None else _pow2_bucket(len(uc))
+    if U != len(uc):
+        uvec = np.concatenate(
+            [uvec, np.zeros((U - len(uc), uvec.shape[1]), np.float32)])
+    return uvec, uhit, inv.reshape(B, C).astype(np.int32)
+
+
 def _pow2_bucket(u: int, floor: int = 512) -> int:
     """Pad unique-row counts to power-of-FOUR buckets (512 floor) so the
     round dispatch compiles a handful of specializations, not one per
@@ -573,7 +661,8 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                   *, f_lam=None, prefetch_budget: int = 0,
                   entry_ids=None, speculate: bool = True,
                   spec_width: int = 0, spec_rank: str = "flam",
-                  spec_predict=None) -> TieredSearchResult:
+                  spec_predict=None, pq=None,
+                  rerank_depth: int = 0) -> TieredSearchResult:
     """Hop-batched frontier search over a disk-backed graph (paper
     Algorithm 1 in its GPU-CPU-disk form) — the tiered arm of the shared
     executor, run as a two-stage speculative pipeline. Per round: ONE
@@ -598,6 +687,19 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
     genuinely IO-bound (disk much slower than this pod's page cache). ``spec_predict``: prediction
     hook with the signature of ``predict_frontier`` (tests force 0%/100%
     misprediction through it).
+
+    ``pq``: a ``quant.PQCodes`` lane — when set, the executor runs in
+    coarse-then-refine mode: every round scores candidates on device from
+    the unconditionally resident PQ codes (ADC LUT gather; NO per-round
+    vector cascade fetch — only adjacency rows cross tiers, and the
+    speculative pipeline stages rows only), then a final re-rank stage
+    pulls exact vectors for the top ``rerank_depth`` pool entries through
+    the existing cascade (device cache -> host window -> disk) and
+    re-scores them exactly. ``rerank_depth`` <= 0 re-ranks the whole
+    pool; it is clamped to [k, pool]. At ``rerank_depth == pool`` with a
+    lossless codebook the PQ lane reproduces the exact executor's
+    results (parity suite). ``spec_rank="dist"`` degrades to the F_λ
+    probe in PQ mode: the stage holds no host vectors to re-rank with.
     """
     store = backend.store
     alive = backend.alive
@@ -623,34 +725,59 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
         entry_ids = rng.integers(0, n, (B, L))
     entry_ids = np.asarray(entry_ids, np.int64)
 
+    use_pq = pq is not None
+    if use_pq:
+        # epoch read BEFORE the sync: a write racing the sync re-syncs
+        # next round rather than never. The hazard is real — alive is
+        # read live per round, so an id inserted mid-search can enter a
+        # round via a reverse-edge-updated row and would otherwise be
+        # scored from its still-zero code row.
+        codes_epoch = store.write_epoch
+        codes_j = pq.synced_codes()
+        depth = L if rerank_depth <= 0 else max(k, min(rerank_depth, L))
+
     spec = None
     if speculate:
         spec = _SpecPipeline(backend, h2d, cache_vec, f_lam,
-                             prefetch_budget=prefetch_budget)
+                             prefetch_budget=prefetch_budget,
+                             stage_vectors=not use_pq)
         spec.validate()
         width = spec_width if spec_width > 0 else beam
         predict = spec_predict if spec_predict is not None else \
             predict_frontier
 
-    # entry pool: one unique-id cascade + one entry dispatch
-    ue, inv_e = np.unique(entry_ids.reshape(-1), return_inverse=True)
-    if spec is not None:
-        uev, _ = spec.vectors_for(ue)
-    else:
-        uev, _ = _resolve_unique_vectors(ue, h2d, cache_vec, store, f_lam)
-    ev = uev[inv_e].reshape(B, L, D)
     entry_alive = alive[entry_ids]
-    pool_ids, pool_d, visited, curr_j = _tiered_entry_dispatch(
-        jnp.asarray(entry_ids, jnp.int32), jnp.asarray(ev),
-        jnp.asarray(entry_alive), qj, beam, id_bound)
-    dispatches = 1
-    if spec is not None:
-        # stage round 1 while the entry dispatch is in flight: the entry
-        # vectors are host-resident, so the first frontier is predicted
-        # from exact host distances
-        pred = predict(entry_ids, entry_alive, f_lam, width,
-                       d_host=_host_sqdist(ev, queries))
-        spec.stage(pred)
+    if use_pq:
+        # entry pool scored from device-resident codes: no vector fetch
+        # at all (the lane's LUTs are built inside the same dispatch)
+        pool_ids, pool_d, visited, curr_j, lut = _pq_entry_dispatch(
+            jnp.asarray(entry_ids, jnp.int32), jnp.asarray(entry_alive),
+            codes_j, pq.codebook.centroids, qj, beam, id_bound)
+        dispatches = 1
+        if spec is not None:
+            # no host vectors in the code lane: the entry prediction
+            # falls back to the F_λ probe (rows-only staging)
+            spec.stage(predict(entry_ids, entry_alive, f_lam, width))
+    else:
+        # entry pool: one unique-id cascade + one entry dispatch
+        ue, inv_e = np.unique(entry_ids.reshape(-1), return_inverse=True)
+        if spec is not None:
+            uev, _ = spec.vectors_for(ue)
+        else:
+            uev, _ = _resolve_unique_vectors(ue, h2d, cache_vec, store,
+                                             f_lam)
+        ev = uev[inv_e].reshape(B, L, D)
+        pool_ids, pool_d, visited, curr_j = _tiered_entry_dispatch(
+            jnp.asarray(entry_ids, jnp.int32), jnp.asarray(ev),
+            jnp.asarray(entry_alive), qj, beam, id_bound)
+        dispatches = 1
+        if spec is not None:
+            # stage round 1 while the entry dispatch is in flight: the
+            # entry vectors are host-resident, so the first frontier is
+            # predicted from exact host distances
+            pred = predict(entry_ids, entry_alive, f_lam, width,
+                           d_host=_host_sqdist(ev, queries))
+            spec.stage(pred)
     curr = np.asarray(curr_j)                 # [B, beam], -1 = idle lane
 
     acc_ids = np.full((B, rounds, C), -1, np.int32)
@@ -676,27 +803,40 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
         nb = nb.reshape(B, C)
 
         valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
-        uc, inv = np.unique(np.where(valid, nb, 0).reshape(-1),
-                            return_inverse=True)
-        if spec is not None:
-            uvec, uhit = spec.vectors_for(uc)
-        else:
-            uvec, uhit = _resolve_unique_vectors(uc, h2d, cache_vec, store,
-                                                 f_lam)
-        U = _pow2_bucket(len(uc))
-        if U != len(uc):
-            uvec = np.concatenate(
-                [uvec, np.zeros((U - len(uc), D), np.float32)])
+        if use_pq:
+            ep = store.write_epoch
+            if ep != codes_epoch:   # concurrent insert: fold fresh codes
+                codes_epoch = ep
+                codes_j = pq.synced_codes()
+            # code-lane round: candidates scored from device-resident
+            # codes — nothing but the id matrix crosses to the device
+            pool_ids, pool_d, visited, curr_j = _pq_round_dispatch(
+                pool_ids, pool_d, visited, jnp.asarray(nb),
+                jnp.asarray(valid), codes_j, lut, beam, id_bound)
+            dispatches += 1
+            acc_ids[:, it] = np.where(valid, nb, -1)
+            if spec is not None:
+                if it + 1 < rounds:
+                    spec.stage(predict(nb, valid, f_lam, width))
+            elif prefetch_budget > 0:
+                _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
+            curr = np.asarray(curr_j)         # the round's only sync point
+            it += 1
+            continue
+        uvec, uhit, inv = _ship_unique_vectors(
+            nb, valid,
+            spec.vectors_for if spec is not None else
+            (lambda u: _resolve_unique_vectors(u, h2d, cache_vec, store,
+                                               f_lam)))
         # launch the round's single device dispatch (async); pool state
         # stays device-resident, only `curr` crosses back. The speculative
         # stage below overlaps with the in-flight dispatch.
         pool_ids, pool_d, visited, curr_j = _tiered_round_dispatch(
             pool_ids, pool_d, visited, jnp.asarray(nb), jnp.asarray(uvec),
-            jnp.asarray(inv.reshape(B, C).astype(np.int32)),
-            jnp.asarray(valid), qj, beam, id_bound)
+            jnp.asarray(inv), jnp.asarray(valid), qj, beam, id_bound)
         dispatches += 1
         acc_ids[:, it] = np.where(valid, nb, -1)
-        acc_hit[:, it] = uhit[inv].reshape(B, C) & valid
+        acc_hit[:, it] = uhit[inv] & valid
         if spec is not None:
             if it + 1 < rounds:   # the last round has no next to stage for
                 d_host = None
@@ -705,13 +845,38 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                     # are already host-resident): sharper than the F_λ
                     # probe, and the cost hides under the in-flight
                     # dispatch like the rest of the stage
-                    d_host = _host_sqdist(
-                        uvec[inv].reshape(B, C, D), queries)
+                    d_host = _host_sqdist(uvec[inv], queries)
                 spec.stage(predict(nb, valid, f_lam, width, d_host=d_host))
         elif prefetch_budget > 0:
             _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
         curr = np.asarray(curr_j)             # the round's only sync point
         it += 1
+
+    if use_pq:
+        # device-hit flags for the placement pass: in the code lane an
+        # access "hits" when its id sits in the exact-vector device cache
+        # (the tier the re-rank stage reads), so WAVP keeps promoting the
+        # hot re-rank set while codes stay unconditionally resident
+        flat = acc_ids.reshape(B, -1)
+        acc_hit_flat = (h2d[np.clip(flat, 0, None)] >= 0) & (flat >= 0)
+
+        # tier-cascade exact re-rank of the top ADC-ranked pool entries
+        pool_ids_np, pool_d_np = np.asarray(pool_ids), np.asarray(pool_d)
+        top_ids = pool_ids_np[:, :depth]
+        valid_r = (top_ids >= 0) & np.isfinite(pool_d_np[:, :depth])
+        uvec, _, inv = _ship_unique_vectors(
+            top_ids, valid_r,
+            lambda u: _resolve_unique_vectors(u, h2d, cache_vec, store,
+                                              f_lam),
+            pad_to=top_ids.size)
+        ids_k, d_k = _pq_rerank_dispatch(
+            jnp.asarray(top_ids, jnp.int32), jnp.asarray(uvec),
+            jnp.asarray(inv), jnp.asarray(valid_r), qj, k)
+        dispatches += 1
+        return TieredSearchResult(
+            np.asarray(ids_k, np.int32), np.asarray(d_k),
+            flat, acc_hit_flat, it, dispatches,
+            spec.hits if spec else 0, spec.misses if spec else 0)
 
     pool_ids, pool_d = np.asarray(pool_ids), np.asarray(pool_d)
     topk_ids = np.where(np.isfinite(pool_d[:, :k]), pool_ids[:, :k], -1)

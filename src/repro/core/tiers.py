@@ -303,6 +303,21 @@ class TieredBackend:
         self.alive = np.zeros((cap,), bool)
         self.e_in = np.zeros((cap,), np.int32)
         self.version = np.zeros((cap,), np.int32)
+        self.pq = None      # quant.PQCodes lane (attach_pq); codes are a
+        #                     directory-style array: unconditionally
+        #                     host+device resident, written through by
+        #                     update.insert_tiered's incremental encode
+
+    def attach_pq(self, pq) -> None:
+        """Attach the PQ code lane (``quant.PQCodes``). The lane's code
+        array spans the whole id space like alive/e_in; inserts encode
+        incrementally into it (write-through), searches read the epoch-
+        synced device mirror."""
+        if pq.codes.shape[0] != self.capacity:
+            raise ValueError(
+                f"pq codes span {pq.codes.shape[0]} ids, disk capacity is "
+                f"{self.capacity}")
+        self.pq = pq
 
     @property
     def capacity(self) -> int:
@@ -322,12 +337,86 @@ class TieredBackend:
 
     def tier_counts(self) -> dict:
         s = self.store
-        return {"host_hits": s.hits, "disk_reads": s.misses,
-                "host_miss_rate": s.miss_rate, "demotions": s.demotions,
-                "prefetched": s.prefetched,
-                "prefetch_dropped": s.prefetch_dropped,
-                "host_resident": s.resident}
+        out = {"host_hits": s.hits, "disk_reads": s.misses,
+               "host_miss_rate": s.miss_rate, "demotions": s.demotions,
+               "prefetched": s.prefetched,
+               "prefetch_dropped": s.prefetch_dropped,
+               "host_resident": s.resident}
+        if self.pq is not None:
+            out["pq_encoded_incremental"] = self.pq.encoded
+        return out
+
+    def bytes_per_tier(self) -> dict:
+        """Allocated byte footprint of each tier's payload arrays (the
+        device exact-vector cache belongs to HostPlacement; the engine
+        merges it in). ``device_codes`` counts the PQ lane's resident
+        codes over the live id space [0, n) — the allocated [capacity, m]
+        array is sized for growth headroom, like the disk memmaps."""
+        s = self.store
+        out = {
+            "host_window": int(s.host_vec.nbytes + s.host_nbr.nbytes),
+            "disk": int(self.capacity
+                        * (self.dim * 4 + self.degree * 4)),
+            "device_codes": (self.pq.code_bytes(self.n)
+                             if self.pq is not None else 0),
+        }
+        return out
 
     def close(self):
         self.store.stop()
         self.store.disk.flush()
+
+
+def probe_fetch_latency(backend: TieredBackend, *, batches: int = 4,
+                        batch: int = 64, seed: int = 0) -> float:
+    """Measure the per-row delta-fetch latency (microseconds) of the disk
+    tier with a short random-read probe. This is the quantity the
+    ``spec_rank`` default hinges on (ROADMAP): exact host re-ranking of
+    the frontier prediction (``"dist"``) costs ~ms of host compute per
+    round and only pays for itself when mispredicted delta fetches are
+    genuinely IO-bound — true on a real SSD (~100 µs/row), false on a
+    page-cache-backed "disk" (~1 µs/row). Reads go straight to the memmap
+    (no window promotion, no counter pollution); the probe runs once at
+    engine startup.
+
+    Two cache effects would otherwise defeat the measurement: the probe
+    runs right after the index build wrote every row, so the pages are
+    warm AND dirty (flush first — DONTNEED cannot free dirty pages, then
+    evict each probed id's page range with ``posix_fadvise(DONTNEED)``);
+    and mispredict delta fetches are *scattered* ids, so the probe reads
+    scattered single rows — a contiguous span would amortize onto a
+    couple of page faults plus readahead and measure ~sequential
+    latency. On tmpfs/ramdisk the advise is a no-op and the probe
+    correctly measures memory speed."""
+    import time
+    rng = np.random.default_rng(seed)
+    disk = backend.store.disk
+    n = max(backend.n, 1)
+    page = 4096
+    ids = rng.integers(0, n, batches * batch)     # scattered, like misses
+    fds = []
+    try:
+        # a delta fetch reads BOTH memmaps (vectors + adjacency): evict
+        # each probed id's page range in each file, or the warm half
+        # understates the cold cost by up to 2x
+        for mm, row_bytes in ((disk.vec, disk.dim * 4),
+                              (disk.nbr, disk.degree * 4)):
+            try:
+                fd = os.open(mm.filename, os.O_RDONLY)
+            except (OSError, TypeError, AttributeError):
+                continue
+            fds.append(fd)
+            if hasattr(os, "posix_fadvise"):
+                mm.flush()      # dirty pages are not evictable
+                for i in ids:   # evict BEFORE timing starts
+                    off = int(i) * row_bytes // page * page
+                    os.posix_fadvise(fd, off, row_bytes + page,
+                                     os.POSIX_FADV_DONTNEED)
+        t0 = time.perf_counter()
+        for s in range(0, len(ids), batch):
+            disk.read(ids[s:s + batch])
+        dt = time.perf_counter() - t0
+    finally:
+        for fd in fds:
+            os.close(fd)
+    return dt / max(len(ids), 1) * 1e6

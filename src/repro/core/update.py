@@ -266,8 +266,13 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     cand_rows[cand_ids < 0] = -1
     sel = rank_based_reorder_host(cand_ids, cand_d, cand_rows, R)
 
-    # establish new vertices (write-through keeps the overlay coherent)
+    # establish new vertices (write-through keeps the overlay coherent);
+    # the PQ code lane encodes incrementally against its frozen codebook
+    # so the device-resident ADC scan covers the new ids from the next
+    # search's epoch sync onward
     store.write(ids, new_vecs, sel)
+    if backend.pq is not None:
+        backend.pq.encode_write(ids, new_vecs)
     backend.alive[ids] = True
     backend.version[ids] = 1
     np.add.at(backend.e_in, sel[sel >= 0], 1)

@@ -11,6 +11,8 @@ import jax
 
 from repro.kernels.l2_gather.kernel import l2_gather
 from repro.kernels.l2_gather.ref import l2_gather_ref
+from repro.kernels.pq_adc.kernel import pq_adc
+from repro.kernels.pq_adc.ref import pq_adc_ref
 from repro.kernels.topk_merge.kernel import topk_merge
 from repro.kernels.topk_merge.ref import topk_merge_ref
 
@@ -20,6 +22,14 @@ def gather_l2(table, ids, queries, *, use_pallas=False, interpret=True):
     if use_pallas:
         return l2_gather(table, ids, queries, interpret=interpret)
     return l2_gather_ref(table, ids, queries)
+
+
+def adc_gather(codes, lut, ids, *, use_pallas=False, interpret=True):
+    """Asymmetric PQ distances (LUT gather) from gathered code rows —
+    the code-lane twin of ``gather_l2``. [B,K] fp32, +inf invalid."""
+    if use_pallas:
+        return pq_adc(codes, lut, ids, interpret=interpret)
+    return pq_adc_ref(codes, lut, ids)
 
 
 def pool_merge(pool_d, pool_i, pool_v, new_d, new_i, *, use_pallas=False,

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the pq_adc kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pq_adc_ref(codes, lut, ids):
+    """codes [N, m] uint8; lut [B, m, K] fp32 per-query ADC tables;
+    ids [B, C] (-1 = invalid lane) -> asymmetric distances [B, C] fp32,
+    +inf on invalid lanes.
+
+    ``d[b, c] = Σ_s lut[b, s, codes[ids[b, c], s]]`` — the LUT-gather form
+    of the asymmetric PQ distance. C is arbitrary: the frontier executor
+    passes the batched (Q, beam·degree) id matrix of a whole expansion
+    round, same contract as ``l2_gather_ref``.
+    """
+    c = codes[jnp.clip(ids, 0)].astype(jnp.int32)        # [B, C, m]
+    d = jnp.take_along_axis(lut, c.transpose(0, 2, 1), axis=2)  # [B, m, C]
+    out = jnp.sum(d, axis=1)
+    return jnp.where(ids >= 0, out, jnp.inf)

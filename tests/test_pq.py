@@ -1,0 +1,369 @@
+"""PQ subsystem tests: pq_adc kernel-vs-ref parity, codebook
+reconstruction bounds, ADC-vs-exact rank fidelity (property), the
+coarse-then-refine executor lane (rerank_depth == pool parity against the
+exact tiered arm), incremental write-through encoding under interleaved
+updates, per-tier byte accounting, and the bench gate's config-key
+comparability."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:   # no network route: replay fixed seeded examples
+    from _hypothesis_shim import given, settings, st
+
+from repro.core import cache as C
+from repro.core import quant
+from repro.core.build import build_tiered_backend
+from repro.core.engine import EngineConfig, SVFusionEngine
+from repro.core.search import search_tiered
+from repro.core.types import SearchParams
+from repro.kernels.pq_adc.kernel import pq_adc
+from repro.kernels.pq_adc.ref import pq_adc_ref
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _lossless_codes(vecs, capacity):
+    """A PQ lane that is lossless BY CONSTRUCTION: m = D subspaces of one
+    dim, centroid k of subspace s is vecs[k, s], and vector i's code is
+    simply i — so decode(codes) == vecs exactly and the ADC distance is
+    the true squared distance (summed subspace-wise). Needs n <= 256."""
+    n, D = vecs.shape
+    assert n <= 256
+    cents = np.full((D, 256, 1), 1e6, np.float32)   # far sentinels
+    cents[:, :n, 0] = vecs.T
+    cb = quant.PQCodebook(centroids=jnp.asarray(cents))
+    codes = np.tile(np.arange(n, dtype=np.uint8)[:, None], (1, D))
+    return quant.PQCodes(cb, capacity, codes=codes)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs ref parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,m,K,B,Cw", [
+    (256, 8, 64, 2, 8), (512, 16, 256, 3, 32), (128, 4, 16, 1, 4),
+    (300, 6, 128, 2, 96), (400, 16, 256, 2, 200),   # > one VMEM tile
+])
+def test_pq_adc_matches_ref(N, m, K, B, Cw):
+    codes = jax.random.randint(KEY, (N, m), 0, K).astype(jnp.uint8)
+    lut = jax.random.uniform(jax.random.PRNGKey(1), (B, m, K))
+    ids = jax.random.randint(jax.random.PRNGKey(2), (B, Cw), 0, N)
+    out = pq_adc(codes, lut, ids, interpret=True)
+    ref = pq_adc_ref(codes, lut, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pq_adc_invalid_lanes_masked():
+    """The frontier executor feeds -1 lanes (padded beam slots, pruned
+    edges): clamp the DMA index, return +inf, never index codes at -1 —
+    the l2_gather contract on the code lane."""
+    codes = jax.random.randint(KEY, (64, 8), 0, 16).astype(jnp.uint8)
+    lut = jax.random.uniform(KEY, (2, 8, 16))
+    ids = jnp.array([[-1, 5, -1, 0, 63, -1, 7, 2],
+                     [1, -1, 1, 1, -1, 62, 0, -1]])
+    out = np.asarray(pq_adc(codes, lut, ids, interpret=True))
+    ref = np.asarray(pq_adc_ref(codes, lut, ids))
+    mask = np.asarray(ids) < 0
+    assert np.isinf(out[mask]).all() and np.isinf(ref[mask]).all()
+    np.testing.assert_allclose(out[~mask], ref[~mask], rtol=1e-5, atol=1e-5)
+
+
+def test_pq_adc_round_batched_id_matrix():
+    """Executor round shape: (Q, beam·degree) id matrix with cross-beam
+    duplicates and -1 padding."""
+    beam, deg = 4, 16
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 256, (400, 16)), jnp.uint8)
+    lut = jax.random.uniform(KEY, (3, 16, 256))
+    ids = rng.integers(0, 400, (3, beam * deg))
+    ids[:, rng.integers(0, beam * deg, 11)] = -1
+    ids[0, :deg] = ids[0, deg:2 * deg]            # cross-beam duplicates
+    ids = jnp.asarray(ids, jnp.int32)
+    out = pq_adc(codes, lut, ids, interpret=True)
+    ref = pq_adc_ref(codes, lut, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# codebook training / encode / decode
+# ---------------------------------------------------------------------------
+
+def test_encode_decode_reconstruction_bound():
+    """Trained Lloyd codebooks must beat the trivial single-centroid
+    quantizer by a wide margin: reconstruction MSE under 15% of the
+    per-dim variance at K=64 on gaussian data (one centroid == 100%)."""
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(600, 16)).astype(np.float32)
+    cb = quant.train_codebook(vecs, m=8, bits=6, iters=15, seed=0)
+    codes = quant.encode(cb, vecs)
+    assert codes.shape == (600, 8) and codes.dtype == np.uint8
+    rec = quant.decode(cb, codes)
+    mse = float(((rec - vecs) ** 2).mean())
+    assert mse < 0.15 * float(vecs.var()), mse
+
+
+def test_encode_chunked_matches_unchunked():
+    rng = np.random.default_rng(1)
+    vecs = rng.normal(size=(1000, 8)).astype(np.float32)
+    cb = quant.train_codebook(vecs, m=4, bits=5, iters=8, seed=0)
+    np.testing.assert_array_equal(quant.encode(cb, vecs, chunk=128),
+                                  quant.encode(cb, vecs, chunk=4096))
+
+
+def test_lossless_codebook_roundtrip_exact():
+    rng = np.random.default_rng(2)
+    vecs = rng.normal(size=(200, 6)).astype(np.float32)
+    pq = _lossless_codes(vecs, 256)
+    np.testing.assert_array_equal(
+        quant.decode(pq.codebook, pq.codes[:200]), vecs)
+
+
+def test_choose_m_divisor():
+    assert quant.choose_m(32, 16) == 16
+    assert quant.choose_m(24, 16) == 12
+    assert quant.choose_m(17, 16) == 1
+    assert quant.choose_m(8, 64) == 8
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(150, 400))
+def test_adc_rank_fidelity_property(seed, n):
+    """ADC distances must preserve exact-distance ranking closely enough
+    to steer the traversal: Spearman rank correlation >= 0.9 over the
+    dataset and >= half the exact top-10 recovered in the ADC top-10 —
+    the coarse half of coarse-then-refine (the re-rank stage supplies
+    exactness, but only over candidates the ADC ranking surfaced)."""
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, 16)).astype(np.float32)
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    cb = quant.train_codebook(vecs, m=8, bits=6, iters=12, seed=seed % 97)
+    codes = jnp.asarray(quant.encode(cb, vecs))
+    lut = quant.adc_lut(cb.centroids, jnp.asarray(q))
+    ids = jnp.tile(jnp.arange(n, dtype=jnp.int32)[None], (4, 1))
+    d_adc = np.asarray(pq_adc_ref(codes, lut, ids))
+    d_ex = ((vecs[None] - q[:, None]) ** 2).sum(-1)
+    for b in range(4):
+        ra = np.argsort(np.argsort(d_adc[b]))
+        re = np.argsort(np.argsort(d_ex[b]))
+        rho = float(np.corrcoef(ra, re)[0, 1])
+        assert rho >= 0.9, rho
+        top_a = set(np.argsort(d_adc[b])[:10].tolist())
+        top_e = set(np.argsort(d_ex[b])[:10].tolist())
+        assert len(top_a & top_e) >= 5, (top_a, top_e)
+
+
+# ---------------------------------------------------------------------------
+# executor code lane: parity + coarse-then-refine behavior
+# ---------------------------------------------------------------------------
+
+def test_pq_rerank_full_pool_parity_with_exact_arm():
+    """Acceptance pin: with a lossless codebook and rerank_depth == pool,
+    PQ-then-full-rerank must return the exact tiered executor's results —
+    ids bit-identical, distances bit-identical (the re-rank recomputes
+    them with the same jitted ``_batch_sqdist`` the exact arm uses)."""
+    rng = np.random.default_rng(3)
+    n, D, deg = 220, 12, 8
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    queries = rng.normal(size=(4, D)).astype(np.float32)
+    sp = SearchParams(k=5, pool=16, max_iters=24, beam=2)
+    entries = rng.integers(0, n, (4, sp.pool))
+    with tempfile.TemporaryDirectory() as td:
+        be = build_tiered_backend(vecs, deg, td, host_window=64)
+        hp = C.HostPlacement(be.capacity, 16, D)
+        try:
+            want = search_tiered(be, hp, queries, 0, sp,
+                                 entry_ids=entries)
+            pq = _lossless_codes(vecs, be.capacity)
+            be.attach_pq(pq)
+            got = search_tiered(be, hp, queries, 0, sp, entry_ids=entries,
+                                pq=pq, rerank_depth=sp.pool)
+            np.testing.assert_array_equal(got.ids, want.ids)
+            np.testing.assert_array_equal(got.dists, want.dists)
+            # speculation must stay transparent on the code lane too
+            got2 = search_tiered(be, hp, queries, 0, sp,
+                                 entry_ids=entries, pq=pq,
+                                 rerank_depth=sp.pool, speculate=False)
+            np.testing.assert_array_equal(got2.ids, want.ids)
+        finally:
+            be.close()
+
+
+def test_pq_lane_no_per_round_vector_fetch():
+    """The tentpole invariant: with PQ on, rounds move adjacency rows
+    only — the vector cascade is touched by the entry/re-rank stages
+    alone, so the store's counted reads drop to the re-rank set."""
+    rng = np.random.default_rng(4)
+    n, D, deg = 400, 16, 8
+    vecs = rng.normal(size=(n, D)).astype(np.float32)
+    queries = rng.normal(size=(8, D)).astype(np.float32)
+    sp = SearchParams(k=10, pool=32, max_iters=48, beam=4)
+    with tempfile.TemporaryDirectory() as td:
+        be = build_tiered_backend(vecs, deg, td, host_window=100)
+        hp = C.HostPlacement(be.capacity, 16, D)
+        try:
+            cb = quant.train_codebook(vecs, m=8, bits=6, iters=10, seed=0)
+            pq = quant.PQCodes(cb, be.capacity,
+                               codes=quant.encode(cb, vecs))
+            be.attach_pq(pq)
+            rerank = 16
+            res = search_tiered(be, hp, queries, 0, sp, pq=pq,
+                                rerank_depth=rerank, speculate=False)
+            s = be.store
+            # every counted access is either a row fetch (rounds) or a
+            # re-rank vector fetch; re-rank unique ids <= B * rerank
+            row_accesses = res.iters * sp.beam * len(queries)
+            assert s.hits + s.misses <= row_accesses + len(queries) * rerank
+            assert (res.dists[res.ids >= 0] >= 0).all()
+        finally:
+            be.close()
+
+
+def test_pq_engine_insert_then_search_incremental_encode(tmp_path):
+    """Interleaved insert/delete/search through the engine with PQ on:
+    write-through incremental encoding must make streamed vectors
+    reachable (read-after-write top-1) and deletions invisible, across
+    several interleaved batches."""
+    rng = np.random.default_rng(5)
+    N, D = 1500, 24
+    vecs = rng.normal(size=(N, D)).astype(np.float32)
+    sp = SearchParams(k=10, pool=64, max_iters=96)
+    eng = SVFusionEngine(vecs, EngineConfig(
+        degree=16, cache_slots=256, capacity=8192,
+        disk_path=str(tmp_path / "tier"), disk_capacity=8192,
+        host_window=375, search=sp, pq_enabled=True, pq_m=12,
+        pq_bits=8, rerank_depth=32))
+    try:
+        assert eng.state.tiered.pq is not None
+        acked = []
+        for i in range(3):
+            newv = rng.normal(size=(32, D)).astype(np.float32)
+            ids = eng.insert(newv)
+            acked.append((ids, newv))
+            found, dists = eng.search(newv)
+            assert float((found[:, 0] == ids).mean()) > 0.9
+            assert (np.diff(dists, axis=1) >= -1e-5).all()
+            if i:   # delete the previous batch, must vanish
+                pids, pvecs = acked[i - 1]
+                eng.delete(pids)
+                found2, _ = eng.search(pvecs)
+                assert not np.isin(pids, found2).any()
+        st = eng.stats()
+        assert st["pq_encoded_incremental"] == 3 * 32
+        # codes stayed unconditionally resident while WAVP manages only
+        # exact slots: footprint ratio bounded by m / (4 * dim)
+        assert st["device_footprint_ratio"] <= 12 / (4 * D) + 1e-9
+        assert st["bytes_per_tier"]["device_codes"] == \
+            int(st["n"]) * st["pq_m"]
+    finally:
+        eng.close()
+
+
+def test_pq_engine_recall_and_footprint(tmp_path):
+    """Acceptance: PQ-on tiered serving at window = dataset/4 reaches
+    recall@10 >= 0.90 with the device code footprint <= 1/8 of the
+    full-coverage fp32 equivalent."""
+    from repro.core.build import build_graph
+    from repro.core.search import brute_force_topk, recall_at_k
+    rng = np.random.default_rng(6)
+    N, D = 2400, 32
+    vecs = rng.normal(size=(N, D)).astype(np.float32)
+    sp = SearchParams(k=10, pool=64, max_iters=96)
+    eng = SVFusionEngine(vecs, EngineConfig(
+        degree=16, cache_slots=256, capacity=8192,
+        disk_path=str(tmp_path / "tier"), disk_capacity=8192,
+        host_window=N // 4, search=sp, pq_enabled=True, pq_m=16,
+        pq_bits=8, rerank_depth=32))
+    try:
+        q = rng.normal(size=(32, D)).astype(np.float32)
+        ids, _ = eng.search(q)
+        truth, _ = brute_force_topk(build_graph(vecs, 16), jnp.asarray(q),
+                                    10)
+        rec = float(recall_at_k(jnp.asarray(ids), truth))
+        assert rec >= 0.90, rec
+        st = eng.stats()
+        assert st["device_footprint_ratio"] <= 1 / 8 + 1e-9
+    finally:
+        eng.close()
+
+
+def test_spec_rank_auto_probe_resolves(tmp_path):
+    """spec_rank="auto" probes delta-fetch latency at startup and picks a
+    concrete predictor; explicit overrides pass through untouched."""
+    rng = np.random.default_rng(7)
+    vecs = rng.normal(size=(600, 16)).astype(np.float32)
+    sp = SearchParams(k=5, pool=32, max_iters=32)
+    eng = SVFusionEngine(vecs, EngineConfig(
+        degree=16, cache_slots=64, capacity=2048,
+        disk_path=str(tmp_path / "auto"), disk_capacity=2048,
+        host_window=150, search=sp, spec_rank="auto"))
+    try:
+        st_ = eng.stats()
+        assert st_["spec_rank_resolved"] in ("flam", "dist")
+        assert st_["spec_probe_us_per_row"] > 0
+    finally:
+        eng.close()
+    eng = SVFusionEngine(vecs, EngineConfig(
+        degree=16, cache_slots=64, capacity=2048,
+        disk_path=str(tmp_path / "dist"), disk_capacity=2048,
+        host_window=150, search=sp, spec_rank="dist"))
+    try:
+        assert eng.stats()["spec_rank_resolved"] == "dist"
+        ids, _ = eng.search(rng.normal(size=(8, 16)).astype(np.float32))
+        assert (ids[:, 0] >= 0).all()
+    finally:
+        eng.close()
+
+
+def test_bench_gate_config_key_separates_pq_modes(tmp_path):
+    """The bench gate must never compare a PQ-on entry against an
+    exact-mode baseline: entries are keyed by config hash. Legacy entries
+    (no pq/scale fields) key equal to fresh exact-mode runs."""
+    import sys
+    sys.path.insert(0, str(__import__("pathlib").Path(
+        __file__).resolve().parent.parent))
+    from benchmarks.bench_disk import _append_result, check_gate, config_key
+    legacy = {"n": 100, "dim": 8, "smoke": True}
+    exact = {"n": 100, "dim": 8, "smoke": True, "pq": False, "scale": False,
+             "window_frac": 4}
+    pqm = dict(exact, pq=True)
+    assert config_key(legacy) == config_key(exact) != config_key(pqm)
+    path = str(tmp_path / "hist.json")
+    mk = lambda meta, qps, rec: {
+        "meta": meta, "tiered_serving": {"search_qps": qps, "recall": rec}}
+    _append_result(mk(legacy, 1000.0, 0.95), path)
+    _append_result(mk(pqm, 500.0, 0.93), path)       # pq-on: no predecessor
+    assert check_gate(path) == []                    # never gates vs exact
+    _append_result(mk(pqm, 490.0, 0.93), path)       # pq vs pq: fine
+    assert check_gate(path) == []
+    _append_result(mk(pqm, 100.0, 0.93), path)       # pq regression: fails
+    assert check_gate(path) != []
+    _append_result(mk(exact, 990.0, 0.95), path)     # exact vs legacy: fine
+    assert check_gate(path) == []
+
+
+def test_bench_results_rotation(tmp_path):
+    """Per-key retention cap with full history under archive/."""
+    import json, os
+    import sys
+    sys.path.insert(0, str(__import__("pathlib").Path(
+        __file__).resolve().parent.parent))
+    from benchmarks.bench_disk import _append_result
+    path = str(tmp_path / "hist.json")
+    for i in range(7):
+        _append_result({"meta": {"n": 1, "dim": 1, "smoke": True},
+                        "i": i}, path, keep_per_key=3)
+    with open(path) as f:
+        kept = json.load(f)
+    assert [e["i"] for e in kept] == [4, 5, 6]
+    apath = os.path.join(str(tmp_path), "archive", "hist.json")
+    with open(apath) as f:
+        arch = json.load(f)
+    assert [e["i"] for e in arch] == [0, 1, 2, 3]
