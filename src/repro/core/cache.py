@@ -17,6 +17,7 @@ compute misses on the capacity tier), ``always`` (promote every miss).
 """
 from __future__ import annotations
 
+import threading
 from functools import partial
 from typing import NamedTuple
 
@@ -262,6 +263,153 @@ class HostPlacement:
     def to_stats(self) -> Stats:
         return Stats(*(jnp.asarray(self.counters[f], jnp.int32)
                        for f in Stats._fields))
+
+
+class TopoCache:
+    """Device-resident topology tier: a row-slot lane caching the hot
+    subgraph's adjacency rows next to (not inside) the exact-vector
+    cache, so the fused multi-round executor can walk the graph without
+    a host round-trip per round (FusionANNS-style device-resident coarse
+    structure: rows are degree·4 bytes/id vs dim·4 for a vector).
+
+    Residency is ordered by the SAME WAVP F_λ predictor that manages the
+    exact-vector slots: admission is demand-driven (the fused shell
+    installs the frontier's missing rows before re-entering the loop) and
+    eviction takes the lowest-F_λ residents first, with the current
+    frontier protected so an install can never thrash the very rows the
+    next dispatch needs.
+
+    Write fencing mirrors ``_StageMap``: ``validate`` snapshots the
+    store's write epoch and, when it moves (``update.insert_tiered``
+    writes rows through ``TieredStore.write``), invalidates the cached
+    topology wholesale — every resident row is re-read from the store in
+    one bulk ``peek_rows`` and the device mirror republished, so a served
+    row is never staler than the per-round path's demand fetch. Re-reading
+    (rather than emptying) keeps the residency set, which is what keeps
+    dispatches/query low across the interleaved insert batches of the
+    streaming bench.
+
+    Host arrays are the truth; ``synced`` publishes the device mirror
+    (full re-put on change — installs are batched, so this is one
+    transfer per host re-entry at worst). All mutation happens under one
+    lock: concurrent search shells may install/validate concurrently.
+    """
+
+    def __init__(self, capacity: int, slots: int, degree: int):
+        self.capacity = int(capacity)
+        self.slots = int(slots)
+        self.degree = int(degree)
+        self.rows = np.full((max(self.slots, 1), degree), -1, np.int32)
+        self.slot_hid = np.full((max(self.slots, 1),), -1, np.int64)
+        self.h2s = np.full((capacity,), -1, np.int32)
+        self.epoch = None            # set on first validate()
+        self.hits = 0                # frontier ids found resident
+        self.misses = 0              # frontier ids needing a delta fetch
+        self.installs = 0
+        self.evictions = 0
+        self.flushes = 0             # epoch-fence wholesale refreshes
+        self._cursor = 0             # slots allotted once, like TieredStore
+        self._dirty = True
+        self._rows_j = None
+        self._h2s_j = None
+        self._lock = threading.Lock()
+
+    @property
+    def row_bytes(self) -> int:
+        """Device-resident topology payload (bytes_per_tier reporting)."""
+        return int(self.rows.nbytes + self.h2s.nbytes) if self.slots else 0
+
+    @property
+    def resident(self) -> int:
+        return int((self.slot_hid >= 0).sum())
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+    def validate(self, store) -> None:
+        """Epoch fence: when the store's write epoch moved, re-read every
+        resident row wholesale (one bulk peek) and republish."""
+        ep = store.write_epoch
+        with self._lock:
+            if self.epoch is None:
+                self.epoch = ep
+                return
+            if ep == self.epoch:
+                return
+            occ = self.slot_hid >= 0
+            if occ.any():
+                self.rows[occ] = store.peek_rows(self.slot_hid[occ])
+                self._dirty = True
+            self.epoch = ep
+            self.flushes += 1
+
+    def install(self, ids, rows, f_lam=None, protect=None) -> bool:
+        """Install rows for unique non-resident ``ids``; returns False
+        (installing nothing) when they cannot all fit without evicting a
+        protected id — the caller falls back to a per-round dispatch.
+        Eviction order: free slots first, then ascending F_λ."""
+        ids = np.asarray(ids)
+        m = len(ids)
+        if m == 0:
+            return True
+        if self.slots == 0 or m > self.slots:
+            return False
+        with self._lock:
+            free = self.slots - self._cursor
+            spill = max(0, m - free)
+            take = m - spill
+            slots = np.empty((m,), np.int64)
+            if spill:
+                occ_ids = self.slot_hid
+                if f_lam is not None:
+                    key = np.asarray(f_lam, np.float64)[
+                        np.clip(occ_ids, 0, None)].copy()
+                else:
+                    key = np.arange(len(occ_ids), dtype=np.float64)
+                key[occ_ids < 0] = np.inf       # unpublished slots: not victims
+                if protect is not None:
+                    ps = self.h2s[np.asarray(protect)]
+                    key[ps[ps >= 0]] = np.inf
+                victims = np.argpartition(key, spill - 1)[:spill]
+                if not np.isfinite(key[victims]).all():
+                    return False                # would evict a protected row
+                old = occ_ids[victims]
+                self.h2s[old[old >= 0]] = -1
+                slots[take:] = victims
+                self.evictions += int(spill)
+            if take:
+                slots[:take] = np.arange(self._cursor, self._cursor + take)
+                self._cursor += take
+            self.rows[slots] = np.asarray(rows, np.int32)
+            self.slot_hid[slots] = ids
+            self.h2s[ids] = slots.astype(np.int32)
+            self.installs += m
+            self._dirty = True
+            return True
+
+    def lookup(self, ids):
+        """(rows [m, R], resident [m]) host snapshot for unique ids — one
+        locked read, so a concurrent install can never pair an id with
+        another id's just-evicted slot contents."""
+        ids = np.asarray(ids)
+        with self._lock:
+            s = self.h2s[ids]
+            ok = s >= 0
+            rows = np.full((len(ids), self.degree), -1, np.int32)
+            rows[ok] = self.rows[s[ok]]
+            return rows, ok
+
+    def synced(self):
+        """Publish (rows, h2s) device mirrors; both republished together
+        so a dispatch can never pair an old directory with new rows."""
+        with self._lock:
+            if self._dirty or self._rows_j is None:
+                self._rows_j = jnp.asarray(self.rows)
+                self._h2s_j = jnp.asarray(self.h2s)
+                self._dirty = False
+            return self._rows_j, self._h2s_j
 
 
 def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,

@@ -87,6 +87,21 @@ class EngineConfig:
     rerank_depth: int = 32               # pool entries exactly re-ranked
     #                                      through the cascade (0 -> pool;
     #                                      == pool pins exact-path parity)
+    # -- fused multi-round executor (PQ mode): device-resident topology
+    #    tier + K-round lax.while_loop dispatch --
+    topo_cache_slots: int = 0            # adjacency-row slots on device
+    #                                      (0 -> disk capacity: full
+    #                                      residency, warmed at init so
+    #                                      steady state is 3 dispatches;
+    #                                      < 0 disables the fused path)
+    fused_rounds: int = 0                # K-round budget per fused
+    #                                      dispatch (0 -> uncapped: one
+    #                                      dispatch covers every in-cache
+    #                                      round)
+    cache_dtype: str = "bf16"            # exact-cache payload dtype:
+    #                                      bf16 halves device vector bytes
+    #                                      (re-rank upcasts to fp32);
+    #                                      "fp32" restores bit-exactness
     build_partitions: int = 1            # partitioned graph build (bounded
     #                                      memory window; used by --scale)
     build_cross_samples: int = 128       # cross-partition candidate columns
@@ -299,6 +314,8 @@ class SVFusionEngine:
         self._search_batches = 0
         self._spec_hits = 0            # speculative-pipeline frontier hits
         self._spec_misses = 0
+        self._topo_hits = 0            # fused-loop topology-cache hits
+        self._topo_misses = 0
         self._coalescer = (CoalescingScheduler(
             self._search_exec, max_batch=cfg.coalesce_max_batch,
             max_window=cfg.coalesce_window) if cfg.coalesce else None)
@@ -319,7 +336,13 @@ class SVFusionEngine:
             host_window=cfg.host_window, seed=cfg.seed,
             n_partitions=cfg.build_partitions,
             cross_samples=cfg.build_cross_samples)
-        self._placement = Cache.HostPlacement(cap, cfg.cache_slots, dim)
+        if cfg.cache_dtype not in ("bf16", "fp32"):
+            raise ValueError(f"cache_dtype must be bf16|fp32, got "
+                             f"{cfg.cache_dtype!r}")
+        cache_dtype = jnp.bfloat16 if cfg.cache_dtype == "bf16" \
+            else np.float32
+        self._placement = Cache.HostPlacement(cap, cfg.cache_slots, dim,
+                                              dtype=cache_dtype)
         if cfg.pq_enabled:
             # codebook build at index time: train per-subspace Lloyd
             # codebooks on a sample, encode the whole seed set, attach
@@ -331,6 +354,21 @@ class SVFusionEngine:
                 sample=cfg.pq_train_sample, seed=cfg.seed)
             self._backend.attach_pq(quant.PQCodes(
                 cb, cap, codes=quant.encode(cb, init_vectors)))
+            if cfg.topo_cache_slots >= 0:
+                # device-resident topology tier for the fused multi-round
+                # executor; 0 slots -> full residency, warmed here so the
+                # first search batch already runs at 3 dispatches/query
+                slots = cfg.topo_cache_slots or cap
+                topo = Cache.TopoCache(cap, slots, cfg.degree)
+                topo.validate(self._backend.store)
+                live = np.flatnonzero(self._backend.alive[:n])
+                if live.size > slots:   # partial cache: warm top-E_in rows
+                    live = live[np.argsort(-self._backend.e_in[live],
+                                           kind="stable")[:slots]]
+                if live.size:
+                    topo.install(live,
+                                 self._backend.store.peek_rows(live))
+                self._backend.attach_topo(topo)
         # spec_rank="auto": probe the disk tier's per-row delta-fetch
         # latency once and pick the frontier predictor from it (the right
         # default flips between page-cache-backed and real-SSD tiers).
@@ -471,7 +509,9 @@ class SVFusionEngine:
             speculate=self.cfg.speculate, spec_width=self.cfg.spec_width,
             spec_rank=self._spec_rank,
             pq=(backend.pq if self.cfg.pq_enabled else None),
-            rerank_depth=self.cfg.rerank_depth)
+            rerank_depth=self.cfg.rerank_depth,
+            topo=(backend.topo if self.cfg.pq_enabled else None),
+            fused_rounds=self.cfg.fused_rounds)
         if Bp != B:   # drop pad lanes from results AND placement logs
             res = res._replace(ids=res.ids[:B], dists=res.dists[:B],
                                acc_ids=res.acc_ids[:B],
@@ -482,6 +522,8 @@ class SVFusionEngine:
             self._search_batches += 1
             self._spec_hits += res.spec_hits
             self._spec_misses += res.spec_misses
+            self._topo_hits += res.topo_hits
+            self._topo_misses += res.topo_misses
         if update_cache:
             with self._cache_lock:
                 Cache.apply_wavp_host(
@@ -515,6 +557,19 @@ class SVFusionEngine:
                         # consolidation in flight: log the window's
                         # reverse edges for the MVCC merge
                         self._rev_logs.append(rev)
+                    topo = self._backend.topo
+                    if topo is not None and len(ids):
+                        # write-through topology install: freshly linked
+                        # rows become device-resident immediately, so the
+                        # next fused search never miss-exits on them
+                        # (reverse-edge updates to OTHER resident rows are
+                        # covered by the write-epoch fence wholesale
+                        # re-read). Uses the same F_λ eviction order as
+                        # demand installs when the cache is partial.
+                        arr = np.asarray(ids, np.int64)
+                        topo.install(
+                            arr, self._backend.store.peek_rows(arr),
+                            self._placement.scores(self._backend.e_in))
                     self._update_batches += 1
                     self._batches_since_repair += 1
                     out.append(np.asarray(ids))
@@ -724,6 +779,16 @@ class SVFusionEngine:
             nb = max(self._search_batches, 1)
             d["search_rounds_per_batch"] = self._search_rounds / nb
             d["search_dispatches_per_batch"] = self._search_dispatches / nb
+            # single source for the fused-executor acceptance metric: the
+            # per-result dispatch counts threaded through
+            # TieredSearchResult (coalescing makes a "batch" one device
+            # dispatch stream regardless of how many callers it serves)
+            d["dispatches_per_query"] = self._search_dispatches / nb
+            d["topo_hits"] = self._topo_hits
+            d["topo_misses"] = self._topo_misses
+            d["topo_hit_rate"] = (self._topo_hits
+                                  / max(self._topo_hits
+                                        + self._topo_misses, 1))
             d["spec_hits"] = self._spec_hits
             d["spec_misses"] = self._spec_misses
             d["spec_hit_rate"] = (self._spec_hits

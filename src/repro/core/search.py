@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.core.quant import adc_lut
 from repro.core.types import CacheState, GraphState, IndexState, SearchParams
-from repro.kernels.ops import adc_gather, gather_l2
+from repro.kernels.ops import adc_gather, gather_l2, gather_rows
 
 INF = jnp.float32(jnp.inf)
 
@@ -188,6 +188,60 @@ def init_pool(entry_ids, entry_d, id_bound=None):
             jnp.zeros(entry_ids.shape, bool))
 
 
+def _run_fused_rounds(state, r_stop, beam, id_bound, row_fn, dist_fn):
+    """The ONE fused multi-round executor core both arms share: a
+    ``lax.while_loop`` running row gather -> distance -> topk merge ->
+    next-frontier select entirely on device, round after round, until the
+    round budget ``r_stop`` (a traced operand: callers re-enter without a
+    recompile), the pool runs dry, or a row lookup stalls.
+
+    ``state`` carry: (r, pool_ids, pool_d, visited, curr, acc_ids
+    [B, rounds, C], acc_hit, iters [B], stall). The frontier ``curr`` is
+    selected at the END of each body (entry select happens outside), so
+    the loop condition reads residual work straight off the idle-lane
+    sentinel — same gating as the old device-arm loop, where the select
+    ran at the top of the body.
+
+    ``row_fn(curr [B, beam]) -> (nb [B, beam, R], resident [B, beam])``
+    resolves frontier adjacency. The device arm's capacity tier is always
+    resident; the tiered arm gathers through the device topology cache
+    (``kernels/row_gather``) and reports non-resident frontier ids. Any
+    true (id >= 0) non-resident lane STALLS the loop: the body's updates
+    are discarded wholesale (the round is not half-applied) and the loop
+    exits with ``stall`` set so the host shell can delta-fetch the rows
+    and re-enter at the same ``r`` — the miss costs one extra dispatch,
+    never a wrong merge.
+
+    ``dist_fn(nb [B, C]) -> (d, hit, valid)`` scores a flattened
+    candidate batch, +inf on invalid lanes.
+    """
+    def cond(s):
+        r, _ids, _d, _vis, curr, _ai, _ah, _it, stall = s
+        return (r < r_stop) & ~stall & (curr >= 0).any()
+
+    def body(s):
+        r, ids, dists, visited, curr, acc_ids, acc_hit, iters, _ = s
+        B, C = acc_ids.shape[0], acc_ids.shape[2]
+        nb, res_ok = row_fn(curr)                     # [B, beam, R]
+        stall = ((curr >= 0) & ~res_ok).any()
+        nb = jnp.where(curr[..., None] >= 0, nb, -1).reshape(B, C)
+        d, hit, valid = dist_fn(nb)
+        active = (curr >= 0).any(1)                   # [B]
+        ids2, d2, vis2 = merge_round(ids, dists, visited, nb, d, id_bound)
+        curr2, vis2 = select_frontier(ids2, d2, vis2, beam)
+        new = (r + 1, ids2, d2, vis2, curr2,
+               acc_ids.at[:, r].set(jnp.where(valid, nb, -1)),
+               acc_hit.at[:, r].set(hit & valid),
+               iters + active.astype(jnp.int32))
+        old = (r, ids, dists, visited, curr, acc_ids, acc_hit, iters)
+        # a stalled round is discarded atomically: every carry leaf keeps
+        # its pre-round value so the host re-enters at the same state
+        return tuple(jnp.where(stall, o, n)
+                     for o, n in zip(old, new)) + (stall,)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
 # ---------------------------------------------------------------------------
 # Device arm: in-memory tiers, one fused jitted program
 # ---------------------------------------------------------------------------
@@ -208,7 +262,11 @@ def _device_distances(graph: GraphState, cache: CacheState, ids, queries):
 def _frontier_search(graph: GraphState, cache: CacheState, queries, entries,
                      sp: SearchParams) -> SearchResult:
     """Hop-batched frontier executor, device arm (traceable; callers jit).
-    queries [B, D], entries [B, L]."""
+    queries [B, D], entries [B, L]. Rounds run through the shared
+    ``_run_fused_rounds`` core — the capacity tier is device-resident, so
+    ``row_fn`` never stalls and every round fuses into the one jitted
+    while_loop, exactly the old bespoke loop's schedule (the parity suite
+    pins this against the per-hop reference)."""
     B = queries.shape[0]
     L, R = sp.pool, graph.degree
     beam = max(1, min(sp.beam, L))
@@ -221,35 +279,23 @@ def _frontier_search(graph: GraphState, cache: CacheState, queries, entries,
     d0 = jnp.where(graph.alive[jnp.clip(entries, 0)] & (entries >= 0),
                    d0, INF)
     pool_ids0, pool_d0, visited0 = init_pool(entries, d0, id_bound)
+    curr0, visited0 = select_frontier(pool_ids0, pool_d0, visited0, beam)
 
-    acc_ids0 = jnp.full((B, rounds, C), -1, jnp.int32)
-    acc_hit0 = jnp.zeros((B, rounds, C), bool)
-    iters0 = jnp.zeros((B,), jnp.int32)
+    def row_fn(curr):
+        nb = graph.nbrs[jnp.clip(curr, 0)]            # always resident
+        return nb, jnp.ones(curr.shape, bool)
 
-    def cond(s):
-        r, ids, dists, visited, *_ = s
-        return (r < rounds) & ((~visited) & jnp.isfinite(dists)).any()
-
-    def body(s):
-        r, ids, dists, visited, acc_ids, acc_hit, iters = s
-        active = ((~visited) & jnp.isfinite(dists)).any(1)          # [B]
-        curr, visited = select_frontier(ids, dists, visited, beam)
-        nb = graph.nbrs[jnp.clip(curr, 0)]                # [B, beam, R]
-        nb = jnp.where(curr[..., None] >= 0, nb, -1).reshape(B, C)
+    def dist_fn(nb):
         valid = (nb >= 0) & graph.alive[jnp.clip(nb, 0)]
         d, hit = _device_distances(graph, cache, nb, queries)
-        d = jnp.where(valid, d, INF)
-        ids, dists, visited = merge_round(ids, dists, visited, nb, d,
-                                          id_bound)
-        acc_ids = acc_ids.at[:, r].set(jnp.where(valid, nb, -1))
-        acc_hit = acc_hit.at[:, r].set(hit & valid)
-        return (r + 1, ids, dists, visited, acc_ids, acc_hit,
-                iters + active.astype(jnp.int32))
+        return jnp.where(valid, d, INF), hit, valid
 
-    _, ids, dists, _, acc_ids, acc_hit, iters = jax.lax.while_loop(
-        cond, body,
-        (jnp.int32(0), pool_ids0, pool_d0, visited0, acc_ids0, acc_hit0,
-         iters0))
+    state0 = (jnp.int32(0), pool_ids0, pool_d0, visited0, curr0,
+              jnp.full((B, rounds, C), -1, jnp.int32),
+              jnp.zeros((B, rounds, C), bool),
+              jnp.zeros((B,), jnp.int32), jnp.bool_(False))
+    (_, ids, dists, _, _, acc_ids, acc_hit, iters, _) = _run_fused_rounds(
+        state0, rounds, beam, id_bound, row_fn, dist_fn)
 
     topk_ids = jnp.where(jnp.isfinite(dists[:, :sp.k]), ids[:, :sp.k], -1)
     return SearchResult(topk_ids, dists[:, :sp.k],
@@ -370,6 +416,158 @@ def _pq_round_dispatch(pool_ids, pool_d, visited, cand_ids, cand_valid,
     return pool_ids, pool_d, visited, curr
 
 
+@partial(jax.jit, static_argnames=("beam", "id_bound"))
+def _pq_fused_dispatch(pool_ids, pool_d, visited, curr, r, acc_ids,
+                       topo_rows, topo_h2s, codes, lut, alive, r_stop,
+                       beam, id_bound):
+    """K consecutive PQ rounds in ONE jitted dispatch — the tiered arm's
+    instantiation of the shared ``_run_fused_rounds`` core. While the
+    frontier stays inside the device-resident topology cache the loop
+    runs row gather (``kernels/row_gather`` over the cached adjacency
+    table) -> ``pq_adc`` ADC scan -> topk merge -> next-frontier select
+    entirely on device; a topology-cache miss stalls the loop atomically
+    and returns the pre-round state, so the host shell delta-fetches the
+    rows and re-enters at the same ``r``. ``r``/``r_stop`` are traced
+    operands: re-entries and K-budget changes never recompile.
+
+    Bit-parity with the per-round ``_pq_round_dispatch`` path holds by
+    construction: the cached rows equal the store rows (epoch-fenced),
+    the candidate mask/merge/select are the same shared core ops in the
+    same order, and a stalled round is discarded wholesale."""
+    def row_fn(c):
+        nb = gather_rows(topo_rows, topo_h2s, c)       # [B, beam, R]
+        slot = topo_h2s[jnp.clip(c, 0)]
+        return nb, (slot >= 0) | (c < 0)               # idle lanes never stall
+
+    def dist_fn(nb):
+        valid = (nb >= 0) & alive[jnp.clip(nb, 0)]
+        d = adc_gather(codes, lut, nb)
+        # code-lane rounds log no per-round device hits: the PQ result's
+        # hit flags are derived from exact-cache residency at the end
+        return jnp.where(valid, d, INF), jnp.zeros(nb.shape, bool), valid
+
+    B = pool_ids.shape[0]
+    state0 = (r, pool_ids, pool_d, visited, curr, acc_ids,
+              jnp.zeros(acc_ids.shape, bool), jnp.zeros((B,), jnp.int32),
+              jnp.bool_(False))
+    (r1, ids1, d1, vis1, curr1, acc1, _, _, _) = _run_fused_rounds(
+        state0, r_stop, beam, id_bound, row_fn, dist_fn)
+    return ids1, d1, vis1, curr1, r1, acc1
+
+
+def _fused_topo_shell(store, topo, spec, alive, f_lam, pq, codes_j,
+                      codes_epoch, lut, pool_ids, pool_d, visited, curr_j,
+                      beam, rounds, id_bound, fused_rounds, stage_width=0):
+    """Host fallback shell around ``_pq_fused_dispatch``: the executor's
+    round loop when a topology cache is attached. Steady state is ONE
+    fused dispatch covering every remaining round (dispatches/query drops
+    to entry + fused + re-rank = 3); the host is re-entered only on a
+    topology-cache miss (install the frontier's missing rows, re-enter at
+    the same round) or the K-round budget (``fused_rounds``; 0 =
+    uncapped). When the missing rows cannot be installed — the cache is
+    too small or every slot is protected by the live frontier — ONE
+    per-round ``_pq_round_dispatch`` runs with host-shipped ids (the
+    forced-0%-hit-rate degenerate case runs entirely on this fallback and
+    must stay bit-identical to the per-round executor, which it is: same
+    dispatch, same inputs).
+
+    ``_SpecPipeline`` integration re-targets speculation to *topology*
+    one cache-miss ahead: while the fused dispatch is in flight the host
+    ranks the frontier's non-resident next-hop candidates by F_λ and
+    stages their store rows, so a future miss-exit's delta fetch is a
+    memo hit instead of disk IO.
+
+    Returns (pool_ids, pool_d, acc [B, rounds, C] np.int32, rounds
+    executed, dispatches issued, topo hits, topo misses)."""
+    B = int(pool_ids.shape[0])
+    R = topo.degree
+    C = beam * R
+    K = fused_rounds if fused_rounds > 0 else rounds
+    acc_j = jnp.full((B, rounds, C), -1, jnp.int32)
+    acc_np = None
+    fb_rounds: list = []
+    dispatches = hits = misses = 0
+    r = 0
+    curr = np.asarray(curr_j)
+    no_progress = 0
+    while r < rounds and (curr >= 0).any():
+        topo.validate(store)
+        ep = store.write_epoch
+        if ep != codes_epoch:       # concurrent insert: fold fresh codes
+            codes_epoch = ep
+            codes_j = pq.synced_codes()
+        ucur = np.unique(curr[curr >= 0])
+        cached_rows, resm = topo.lookup(ucur)
+        need = ucur[~resm]
+        hits += int(resm.sum())
+        topo.hits += int(resm.sum())
+        rows_need = None
+        installed = True
+        if need.size:
+            misses += int(need.size)
+            topo.misses += int(need.size)
+            if spec is not None:
+                spec.validate()
+                rows_need = spec.rows_for(need)
+            else:
+                rows_need = store.fetch_rows(need, f_lam)
+            # the live frontier is protected: an install can never evict
+            # the rows the dispatch it feeds is about to gather
+            installed = topo.install(need, rows_need, f_lam, protect=ucur)
+        if installed and no_progress < 3:
+            rows_j, h2s_j = topo.synced()
+            out = _pq_fused_dispatch(
+                pool_ids, pool_d, visited, curr_j,
+                jnp.asarray(r, jnp.int32), acc_j, rows_j, h2s_j, codes_j,
+                lut, jnp.asarray(alive),
+                jnp.asarray(min(r + K, rounds), jnp.int32), beam, id_bound)
+            dispatches += 1
+            if spec is not None:
+                # topology prefetch one cache-miss ahead, overlapping the
+                # in-flight dispatch: stage store rows for the hottest
+                # non-resident candidates reachable from this frontier
+                if rows_need is not None:
+                    cached_rows[~resm] = rows_need
+                nxt = np.unique(cached_rows[cached_rows >= 0])
+                nxt = nxt[topo.h2s[nxt] < 0]
+                if nxt.size:
+                    w = max(stage_width, 1) * B
+                    if nxt.size > w:
+                        nxt = nxt[np.argpartition(-f_lam[nxt], w - 1)[:w]]
+                    spec.stage(nxt)
+            pool_ids, pool_d, visited, curr_j, r_j, acc_j = out
+            curr = np.asarray(curr_j)         # the shell's only sync point
+            new_r = int(r_j)
+            # a dispatch that advanced no round means residency changed
+            # under us (concurrent install/evict): bounded retries, then
+            # force the per-round fallback so the shell always progresses
+            no_progress = no_progress + 1 if new_r == r else 0
+            r = new_r
+        else:
+            if rows_need is not None:
+                cached_rows[~resm] = rows_need
+            nb = np.full((B, beam, R), -1, np.int32)
+            okm = curr >= 0
+            nb[okm] = cached_rows[np.searchsorted(ucur, curr[okm])]
+            nb = nb.reshape(B, C)
+            valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
+            pool_ids, pool_d, visited, curr_j = _pq_round_dispatch(
+                pool_ids, pool_d, visited, jnp.asarray(nb),
+                jnp.asarray(valid), codes_j, lut, beam, id_bound)
+            dispatches += 1
+            if acc_np is None:
+                acc_np = np.full((B, rounds, C), -1, np.int32)
+            acc_np[:, r] = np.where(valid, nb, -1)
+            fb_rounds.append(r)
+            curr = np.asarray(curr_j)
+            r += 1
+            no_progress = 0
+    acc = np.array(acc_j)   # copy: jax buffers are read-only views
+    if fb_rounds:   # overlay host-logged fallback rounds onto the device log
+        acc[:, fb_rounds] = acc_np[:, fb_rounds]
+    return pool_ids, pool_d, acc, r, dispatches, hits, misses
+
+
 @partial(jax.jit, static_argnames=("k",))
 def _pq_rerank_dispatch(top_ids, uniq_vecs, cand_inv, valid, queries, k):
     """Tier-cascade exact re-rank: the top ``depth`` ADC-ranked pool
@@ -409,14 +607,23 @@ class TieredSearchResult(NamedTuple):
     acc_ids: np.ndarray   # [B, rounds*beam*R] accessed vertex ids (-1 pad)
     acc_hit: np.ndarray   # [B, rounds*beam*R] device-cache-hit flags
     iters: int            # expansion rounds executed
-    dispatches: int       # jitted device dispatches issued (1 + iters)
+    dispatches: int       # jitted device dispatches issued (per-round:
+    #                       1 + iters + rerank; fused: entry + fused
+    #                       re-entries + fallback rounds + rerank)
     spec_hits: int = 0    # frontier rows already staged at read-back
     spec_misses: int = 0  # frontier rows delta-fetched after read-back
+    topo_hits: int = 0    # frontier ids resident in the topology cache
+    topo_misses: int = 0  # frontier ids delta-fetched + installed
 
     @property
     def spec_hit_rate(self) -> float:
         t = self.spec_hits + self.spec_misses
         return self.spec_hits / t if t else 0.0
+
+    @property
+    def topo_hit_rate(self) -> float:
+        t = self.topo_hits + self.topo_misses
+        return self.topo_hits / t if t else 0.0
 
 
 def _resolve_unique_vectors(ids, h2d, cache_vec, store, f_lam):
@@ -662,7 +869,8 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                   entry_ids=None, speculate: bool = True,
                   spec_width: int = 0, spec_rank: str = "flam",
                   spec_predict=None, pq=None,
-                  rerank_depth: int = 0) -> TieredSearchResult:
+                  rerank_depth: int = 0, topo=None,
+                  fused_rounds: int = 0) -> TieredSearchResult:
     """Hop-batched frontier search over a disk-backed graph (paper
     Algorithm 1 in its GPU-CPU-disk form) — the tiered arm of the shared
     executor, run as a two-stage speculative pipeline. Per round: ONE
@@ -700,6 +908,17 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
     lossless codebook the PQ lane reproduces the exact executor's
     results (parity suite). ``spec_rank="dist"`` degrades to the F_λ
     probe in PQ mode: the stage holds no host vectors to re-rank with.
+
+    ``topo``: a ``cache.TopoCache`` device-resident topology lane — when
+    set (PQ mode only; the exact lane needs host vectors every round
+    regardless), the round loop runs through the K-round fused dispatch
+    (``_pq_fused_dispatch`` + ``_fused_topo_shell``): while the frontier
+    stays inside the cached topology, row gather -> ADC scan -> merge ->
+    select all happen on device in one ``lax.while_loop`` dispatch, and
+    the host is re-entered only on a topology-cache miss or the
+    ``fused_rounds`` budget (0 = uncapped). Results are bit-identical to
+    the per-round executor (parity suite pins K ∈ {1, 2, 4} and forced
+    0%/100% topology hit rates).
     """
     store = backend.store
     alive = backend.alive
@@ -783,74 +1002,86 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
     acc_ids = np.full((B, rounds, C), -1, np.int32)
     acc_hit = np.zeros((B, rounds, C), bool)
     it = 0
-    for _ in range(rounds):
-        ok = curr >= 0
-        if not ok.any():
-            break
-        # ONE bulk row fetch for the whole beam (topology lives on
-        # host/disk only; the device cache stores vectors). Staged rows
-        # from the speculative stage short-circuit it to a delta fetch.
-        ucur = np.unique(curr[ok])
-        if spec is not None:
-            spec.validate()
-            urows = spec.rows_for(ucur)
-        else:
-            urows = store.fetch_rows(ucur, f_lam)
-        nb = np.full((B, beam, R), -1, np.int32)
-        # searchsorted over the (sorted) unique ids: O(|curr| log |ucur|),
-        # no O(dataset) scratch on the per-round hot path
-        nb[ok] = urows[np.searchsorted(ucur, curr[ok])]
-        nb = nb.reshape(B, C)
+    topo_hits = topo_misses = 0
+    if use_pq and topo is not None:
+        # fused multi-round executor: the shell owns the round loop and
+        # issues ONE lax.while_loop dispatch per contiguous in-cache run
+        (pool_ids, pool_d, acc_ids, it, extra, topo_hits,
+         topo_misses) = _fused_topo_shell(
+            store, topo, spec, alive, f_lam, pq, codes_j, codes_epoch,
+            lut, pool_ids, pool_d, visited, curr_j, beam, rounds,
+            id_bound, fused_rounds,
+            stage_width=(width if spec is not None else 0))
+        dispatches += extra
+    else:
+        for _ in range(rounds):
+            ok = curr >= 0
+            if not ok.any():
+                break
+            # ONE bulk row fetch for the whole beam (topology lives on
+            # host/disk only; the device cache stores vectors). Staged rows
+            # from the speculative stage short-circuit it to a delta fetch.
+            ucur = np.unique(curr[ok])
+            if spec is not None:
+                spec.validate()
+                urows = spec.rows_for(ucur)
+            else:
+                urows = store.fetch_rows(ucur, f_lam)
+            nb = np.full((B, beam, R), -1, np.int32)
+            # searchsorted over the (sorted) unique ids: O(|curr| log |ucur|),
+            # no O(dataset) scratch on the per-round hot path
+            nb[ok] = urows[np.searchsorted(ucur, curr[ok])]
+            nb = nb.reshape(B, C)
 
-        valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
-        if use_pq:
-            ep = store.write_epoch
-            if ep != codes_epoch:   # concurrent insert: fold fresh codes
-                codes_epoch = ep
-                codes_j = pq.synced_codes()
-            # code-lane round: candidates scored from device-resident
-            # codes — nothing but the id matrix crosses to the device
-            pool_ids, pool_d, visited, curr_j = _pq_round_dispatch(
-                pool_ids, pool_d, visited, jnp.asarray(nb),
-                jnp.asarray(valid), codes_j, lut, beam, id_bound)
+            valid = (nb >= 0) & alive[np.clip(nb, 0, None)]
+            if use_pq:
+                ep = store.write_epoch
+                if ep != codes_epoch:   # concurrent insert: fold fresh codes
+                    codes_epoch = ep
+                    codes_j = pq.synced_codes()
+                # code-lane round: candidates scored from device-resident
+                # codes — nothing but the id matrix crosses to the device
+                pool_ids, pool_d, visited, curr_j = _pq_round_dispatch(
+                    pool_ids, pool_d, visited, jnp.asarray(nb),
+                    jnp.asarray(valid), codes_j, lut, beam, id_bound)
+                dispatches += 1
+                acc_ids[:, it] = np.where(valid, nb, -1)
+                if spec is not None:
+                    if it + 1 < rounds:
+                        spec.stage(predict(nb, valid, f_lam, width))
+                elif prefetch_budget > 0:
+                    _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
+                curr = np.asarray(curr_j)         # the round's only sync point
+                it += 1
+                continue
+            uvec, uhit, inv = _ship_unique_vectors(
+                nb, valid,
+                spec.vectors_for if spec is not None else
+                (lambda u: _resolve_unique_vectors(u, h2d, cache_vec, store,
+                                                   f_lam)))
+            # launch the round's single device dispatch (async); pool state
+            # stays device-resident, only `curr` crosses back. The speculative
+            # stage below overlaps with the in-flight dispatch.
+            pool_ids, pool_d, visited, curr_j = _tiered_round_dispatch(
+                pool_ids, pool_d, visited, jnp.asarray(nb), jnp.asarray(uvec),
+                jnp.asarray(inv), jnp.asarray(valid), qj, beam, id_bound)
             dispatches += 1
             acc_ids[:, it] = np.where(valid, nb, -1)
+            acc_hit[:, it] = uhit[inv] & valid
             if spec is not None:
-                if it + 1 < rounds:
-                    spec.stage(predict(nb, valid, f_lam, width))
+                if it + 1 < rounds:   # the last round has no next to stage for
+                    d_host = None
+                    if spec_rank == "dist":
+                        # re-rank by exact host distances (the unique vectors
+                        # are already host-resident): sharper than the F_λ
+                        # probe, and the cost hides under the in-flight
+                        # dispatch like the rest of the stage
+                        d_host = _host_sqdist(uvec[inv], queries)
+                    spec.stage(predict(nb, valid, f_lam, width, d_host=d_host))
             elif prefetch_budget > 0:
                 _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
-            curr = np.asarray(curr_j)         # the round's only sync point
+            curr = np.asarray(curr_j)             # the round's only sync point
             it += 1
-            continue
-        uvec, uhit, inv = _ship_unique_vectors(
-            nb, valid,
-            spec.vectors_for if spec is not None else
-            (lambda u: _resolve_unique_vectors(u, h2d, cache_vec, store,
-                                               f_lam)))
-        # launch the round's single device dispatch (async); pool state
-        # stays device-resident, only `curr` crosses back. The speculative
-        # stage below overlaps with the in-flight dispatch.
-        pool_ids, pool_d, visited, curr_j = _tiered_round_dispatch(
-            pool_ids, pool_d, visited, jnp.asarray(nb), jnp.asarray(uvec),
-            jnp.asarray(inv), jnp.asarray(valid), qj, beam, id_bound)
-        dispatches += 1
-        acc_ids[:, it] = np.where(valid, nb, -1)
-        acc_hit[:, it] = uhit[inv] & valid
-        if spec is not None:
-            if it + 1 < rounds:   # the last round has no next to stage for
-                d_host = None
-                if spec_rank == "dist":
-                    # re-rank by exact host distances (the unique vectors
-                    # are already host-resident): sharper than the F_λ
-                    # probe, and the cost hides under the in-flight
-                    # dispatch like the rest of the stage
-                    d_host = _host_sqdist(uvec[inv], queries)
-                spec.stage(predict(nb, valid, f_lam, width, d_host=d_host))
-        elif prefetch_budget > 0:
-            _predict_prefetch(store, nb, valid, f_lam, prefetch_budget)
-        curr = np.asarray(curr_j)             # the round's only sync point
-        it += 1
 
     if use_pq:
         # device-hit flags for the placement pass: in the code lane an
@@ -876,7 +1107,8 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
         return TieredSearchResult(
             np.asarray(ids_k, np.int32), np.asarray(d_k),
             flat, acc_hit_flat, it, dispatches,
-            spec.hits if spec else 0, spec.misses if spec else 0)
+            spec.hits if spec else 0, spec.misses if spec else 0,
+            topo_hits, topo_misses)
 
     pool_ids, pool_d = np.asarray(pool_ids), np.asarray(pool_d)
     topk_ids = np.where(np.isfinite(pool_d[:, :k]), pool_ids[:, :k], -1)

@@ -307,6 +307,25 @@ class TieredBackend:
         #                     directory-style array: unconditionally
         #                     host+device resident, written through by
         #                     update.insert_tiered's incremental encode
+        self.topo = None    # cache.TopoCache row-slot lane (attach_topo):
+        #                     device-resident adjacency rows for the fused
+        #                     multi-round executor, F_λ-ordered residency,
+        #                     epoch-fenced against store writes
+
+    def attach_topo(self, topo) -> None:
+        """Attach the device-resident topology row cache
+        (``cache.TopoCache``). Its id->slot directory spans the whole id
+        space like alive/e_in; the fused executor installs rows on demand
+        and validates against the store's write epoch per host re-entry."""
+        if topo.capacity != self.capacity:
+            raise ValueError(
+                f"topo cache spans {topo.capacity} ids, disk capacity is "
+                f"{self.capacity}")
+        if topo.degree != self.degree:
+            raise ValueError(
+                f"topo cache rows are degree {topo.degree}, graph degree "
+                f"is {self.degree}")
+        self.topo = topo
 
     def attach_pq(self, pq) -> None:
         """Attach the PQ code lane (``quant.PQCodes``). The lane's code
@@ -344,6 +363,12 @@ class TieredBackend:
                "host_resident": s.resident}
         if self.pq is not None:
             out["pq_encoded_incremental"] = self.pq.encoded
+        if self.topo is not None:
+            t = self.topo
+            out.update(topo_hits=t.hits, topo_misses=t.misses,
+                       topo_hit_rate=t.hit_rate, topo_installs=t.installs,
+                       topo_evictions=t.evictions, topo_flushes=t.flushes,
+                       topo_resident=t.resident)
         return out
 
     def bytes_per_tier(self) -> dict:
@@ -359,6 +384,10 @@ class TieredBackend:
                         * (self.dim * 4 + self.degree * 4)),
             "device_codes": (self.pq.code_bytes(self.n)
                              if self.pq is not None else 0),
+            # topology row slots + id->slot directory (the fused
+            # executor's device-resident adjacency lane)
+            "device_topo_rows": (self.topo.row_bytes
+                                 if self.topo is not None else 0),
         }
         return out
 

@@ -13,6 +13,8 @@ from repro.kernels.l2_gather.kernel import l2_gather
 from repro.kernels.l2_gather.ref import l2_gather_ref
 from repro.kernels.pq_adc.kernel import pq_adc
 from repro.kernels.pq_adc.ref import pq_adc_ref
+from repro.kernels.row_gather.kernel import row_gather
+from repro.kernels.row_gather.ref import row_gather_ref
 from repro.kernels.topk_merge.kernel import topk_merge
 from repro.kernels.topk_merge.ref import topk_merge_ref
 
@@ -30,6 +32,16 @@ def adc_gather(codes, lut, ids, *, use_pallas=False, interpret=True):
     if use_pallas:
         return pq_adc(codes, lut, ids, interpret=interpret)
     return pq_adc_ref(codes, lut, ids)
+
+
+def gather_rows(table, h2s, ids, *, use_pallas=False, interpret=True):
+    """Adjacency rows for frontier ids through the device-resident
+    topology cache (h2s directory -> cached row table) — the in-loop
+    topology read of the fused multi-round executor. [B,W,R] int32,
+    -1-sentinel rows on non-resident/idle lanes."""
+    if use_pallas:
+        return row_gather(table, h2s, ids, interpret=interpret)
+    return row_gather_ref(table, h2s, ids)
 
 
 def pool_merge(pool_d, pool_i, pool_v, new_d, new_i, *, use_pallas=False,

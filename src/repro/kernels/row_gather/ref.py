@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the row_gather kernel."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def row_gather_ref(table, h2s, ids):
+    """table [S,R] int32 cached adjacency rows; h2s [N] int32 id->slot
+    directory (-1 = non-resident); ids [B,W] int32 (-1 = idle lane) ->
+    rows [B,W,R] int32, every lane of a non-resident or idle id forced
+    to the -1 sentinel.
+
+    The -1 sentinel is load-bearing twice over: downstream the fused
+    round treats -1 candidates as invalid (masked to +inf before the
+    merge), and the fused loop's stall detector distinguishes "id has
+    no cached row" (slot < 0 with id >= 0 -> exit to host for a delta
+    fetch) from "lane idle" (id < 0 -> keep going).
+    """
+    slot = h2s[jnp.clip(ids, 0)]
+    ok = (ids >= 0) & (slot >= 0)
+    rows = table[jnp.clip(slot, 0)]
+    return jnp.where(ok[..., None], rows, -1)

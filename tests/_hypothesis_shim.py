@@ -58,6 +58,14 @@ class strategies:
         return _Strategy(lambda rng: bool(rng.integers(0, 2)),
                          boundaries=(False, True))
 
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        # boundaries: first and last, mirroring hypothesis's shrink targets
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(0, len(elements)))],
+            boundaries=(elements[0], elements[-1]))
+
 
 st = strategies
 

@@ -367,3 +367,81 @@ def test_bench_results_rotation(tmp_path):
     with open(apath) as f:
         arch = json.load(f)
     assert [e["i"] for e in arch] == [0, 1, 2, 3]
+
+
+def test_bench_gate_median_resample_rescues_noisy_run(tmp_path):
+    """Gate robustness: a single noisy QPS sample below the floor must
+    not fail the gate when the median of the entry's re-samples clears
+    it; a genuinely regressed median still fails."""
+    import sys
+    sys.path.insert(0, str(__import__("pathlib").Path(
+        __file__).resolve().parent.parent))
+    from benchmarks.bench_disk import _append_result, check_gate, qps_floor
+    meta = {"n": 100, "dim": 8, "smoke": True, "pq": True, "scale": False,
+            "window_frac": 4}
+    path = str(tmp_path / "hist.json")
+    _append_result({"meta": meta, "tiered_serving":
+                    {"search_qps": 1000.0, "recall": 0.95}}, path)
+    assert qps_floor(meta, path=path) == 800.0
+    # noisy headline number, but the median of 3 re-samples clears it
+    _append_result({"meta": meta, "tiered_serving":
+                    {"search_qps": 700.0, "recall": 0.95,
+                     "qps_samples": [700.0, 950.0, 990.0]}}, path)
+    assert check_gate(path) == []
+    # median below the floor: regression is real, gate fails (fresh
+    # history — the gate compares against the immediate predecessor)
+    path2 = str(tmp_path / "hist2.json")
+    _append_result({"meta": meta, "tiered_serving":
+                    {"search_qps": 1000.0, "recall": 0.95}}, path2)
+    _append_result({"meta": meta, "tiered_serving":
+                    {"search_qps": 700.0, "recall": 0.95,
+                     "qps_samples": [700.0, 710.0, 990.0]}}, path2)
+    fails = check_gate(path2)
+    assert fails and "median" in fails[0]
+
+
+def test_bf16_exact_cache_halves_bytes_recall_within_bar(tmp_path):
+    """The exact re-rank payload rides the device cache in bf16 (default
+    ``cache_dtype``): the device exact-vector footprint halves while
+    recall@10 stays within 0.005 of the fp32 cache — the re-rank
+    distances are computed in fp32 either way, only the cached payload
+    is rounded (~3 decimal digits, far below the inter-neighbor distance
+    gaps of real data)."""
+    rng = np.random.default_rng(21)
+    n, dim = 900, 16
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    # enough queries that the delta estimate resolves well under the
+    # 0.005 bar (each rank-10 near-tie flip moves recall by 1/(10 B))
+    queries = rng.normal(size=(128, dim)).astype(np.float32)
+    sp = SearchParams(k=10, pool=64, max_iters=96)
+    truth = np.argsort(((vecs[None] - queries[:, None]) ** 2)
+                       .sum(-1), axis=1)[:, :10]
+
+    def run(dtype):
+        eng = SVFusionEngine(vecs, EngineConfig(
+            degree=16, cache_slots=256, capacity=2 * n,
+            disk_path=str(tmp_path / dtype), disk_capacity=2 * n,
+            host_window=n // 4, search=sp, seed=0, coalesce=False,
+            pq_enabled=True, pq_m=8, pq_bits=8, rerank_depth=32,
+            cache_dtype=dtype))
+        try:
+            for _ in range(3):     # converge the WAVP placement
+                eng.search(queries, update_cache=True)
+            ids, _ = eng.search(queries)
+            st = eng.stats()
+            rec = float(np.mean([len(set(ids[i, :10].tolist())
+                                     & set(truth[i].tolist())) / 10
+                                 for i in range(len(queries))]))
+            return rec, st["bytes_per_tier"]["device_exact_cache"]
+        finally:
+            eng.close()
+
+    rec16, bytes16 = run("bf16")
+    rec32, bytes32 = run("fp32")
+    assert bytes16 * 2 == bytes32
+    assert abs(rec32 - rec16) < 0.005, (rec32, rec16)
+    with pytest.raises(ValueError):
+        SVFusionEngine(vecs[:64], EngineConfig(
+            degree=8, cache_slots=16, capacity=128,
+            disk_path=str(tmp_path / "bad"), disk_capacity=128,
+            cache_dtype="fp64"))
