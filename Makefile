@@ -8,16 +8,22 @@
 #                      against its own config-key history
 #   make bench-scale — >=10x memmap-built scale-up preset (PQ code lane,
 #                      per-tier byte footprints; minutes-scale, not CI)
+#   make verify-durability — the FULL kill -9 crash matrix (every crash
+#                      point x workload incl. PQ variants) + all
+#                      durability unit tests; tier-1 runs only a slice
 
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test bench-disk bench-smoke bench-scale
+.PHONY: verify test verify-durability bench-disk bench-smoke bench-scale
 
 verify:
 	$(PY) -m pytest -x -q
 
 test: verify
+
+verify-durability:
+	SVF_DURABILITY_FULL=1 $(PY) -m pytest tests/test_durability.py -q
 
 bench-disk:
 	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py

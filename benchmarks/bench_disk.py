@@ -30,7 +30,10 @@ assert the fused executor's dispatch budget (<= 4 device dispatches per
 query; the per-round executor needed ~7-10). ``--pq`` serves through the
 device-resident PQ code lane (quant.py: ADC scan + tier-cascade exact
 re-rank); ``--scale`` runs the ≥10x memmap-built scale-up preset with PQ
-on and records per-tier byte footprints.
+on and records per-tier byte footprints. Every default/smoke run also
+records ``wal_overhead`` (core/wal.py durability tax: paired WAL-on vs
+WAL-off insert throughput, median of 3); ``--gate`` additionally fails
+when ``wal_overhead_pct`` exceeds 15%.
 """
 from __future__ import annotations
 
@@ -448,6 +451,56 @@ def _streaming_tiered(vecs, sp, results, seed, rounds=6, insert_chunk=128,
     results["tiered_serving"] = out
 
 
+def _wal_overhead_probe(vecs, sp, seed, *, rounds, insert_chunk,
+                        samples=3):
+    """Durability cost probe: median-of-``samples`` insert throughput with
+    the write-ahead log on vs off, over identical fresh engines and
+    identical insert streams. ``wal_overhead_pct`` is the gated figure
+    (<= 15%): the WAL adds one unbuffered frame write per insert batch
+    plus a group-commit fsync every ``wal_group_commit`` batches, so the
+    overhead should stay single-digit — a blowout means the prepare/apply
+    split regressed into extra store traffic."""
+    n, dim = vecs.shape
+    n_seed = n // 2
+
+    def run(wal_on):
+        with tempfile.TemporaryDirectory() as td:
+            eng = SVFusionEngine(vecs[:n_seed], EngineConfig(
+                degree=16, cache_slots=512, capacity=2 * n,
+                disk_path=td, disk_capacity=2 * n,
+                host_window=max(64, n // 4), search=sp, seed=seed,
+                coalesce=False, prefetch=False, wal_enabled=wal_on,
+                snapshot_every_epochs=0))
+            try:
+                cursor = n_seed
+                # warm round: compile the insert path outside the timing
+                eng.insert(vecs[cursor:cursor + insert_chunk])
+                cursor += insert_chunk
+                cnt = 0
+                t0 = time.perf_counter()
+                for _ in range(rounds):
+                    part = vecs[cursor:cursor + insert_chunk]
+                    if not len(part):
+                        break
+                    eng.insert(part)
+                    cnt += len(part)
+                    cursor += len(part)
+                return cnt / max(time.perf_counter() - t0, 1e-9)
+            finally:
+                eng.close()
+
+    # interleave the paired runs (alternating order) so slow drift in
+    # background load lands on both sides instead of biasing whichever
+    # mode happened to run last
+    ons, offs = [], []
+    for i in range(samples):
+        for wal_on in ((True, False) if i % 2 == 0 else (False, True)):
+            (ons if wal_on else offs).append(run(wal_on))
+    on, off = _median(ons), _median(offs)
+    return {"insert_qps_wal_on": on, "insert_qps_wal_off": off,
+            "wal_overhead_pct": max(0.0, (off - on) / off * 100.0)}
+
+
 def main(n=6000, dim=32, seed=0, *, smoke=False, recall_bar=0.8,
          gate=False, pq=False):
     rng = np.random.default_rng(seed)
@@ -465,11 +518,23 @@ def main(n=6000, dim=32, seed=0, *, smoke=False, recall_bar=0.8,
                       query_batch=32 if smoke else 64,
                       meas_batches=20 if smoke else 24,
                       pq=pq, floor=qps_floor(meta) if gate else None)
+    results["wal_overhead"] = _wal_overhead_probe(
+        vecs, sp, seed,
+        rounds=4, insert_chunk=64 if smoke else 128)
     results["meta"] = dict(meta,
                            timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"))
     path = _append_result(results)
     print(f"bench_disk: appended run entry to {path} "
           f"(key {config_key(results['meta'])})", flush=True)
+    wal_pct = results["wal_overhead"]["wal_overhead_pct"]
+    print(f"  wal_overhead_pct: {wal_pct:.1f}% "
+          f"(insert QPS {results['wal_overhead']['insert_qps_wal_on']:.0f} "
+          f"on / {results['wal_overhead']['insert_qps_wal_off']:.0f} off)",
+          flush=True)
+    if gate and wal_pct > 15.0:
+        print(f"bench gate FAIL: WAL insert overhead {wal_pct:.1f}% > 15% "
+              f"(median of 3 paired runs)", file=sys.stderr)
+        raise SystemExit(1)
     assert results["tiered_serving"]["recall"] >= recall_bar, \
         f"three-tier recall@10 below bar: {results['tiered_serving']}"
     if pq:

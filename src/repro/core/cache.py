@@ -412,6 +412,26 @@ class TopoCache:
             return self._rows_j, self._h2s_j
 
 
+def warm_topo_cache(backend, slots: int) -> TopoCache:
+    """Build, warm and attach the device-resident topology row cache for
+    a tiered backend: full residency when ``slots`` covers the capacity,
+    else the top-E_in live rows. The cache is a PURE cache of the store's
+    adjacency truth — the engine calls this both at fresh build and after
+    crash recovery (``wal.recover``), where every device mirror is
+    rebuilt from the recovered host state."""
+    cap = backend.capacity
+    slots = slots or cap
+    topo = TopoCache(cap, slots, backend.degree)
+    topo.validate(backend.store)
+    live = np.flatnonzero(backend.alive[:backend.n])
+    if live.size > slots:          # partial cache: warm the hottest rows
+        live = live[np.argsort(-backend.e_in[live], kind="stable")[:slots]]
+    if live.size:
+        topo.install(live, backend.store.peek_rows(live))
+    backend.attach_topo(topo)
+    return topo
+
+
 def apply_wavp_host(hp: HostPlacement, acc_ids, acc_hit, sp: SearchParams,
                     *, alive, e_in, fetch_vectors, now=0,
                     cascade_promote: bool = True) -> None:

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import cache as Cache
 from repro.core import mvcc, update
+from repro.core import wal as walmod
 from repro.core.build import build_index
 from repro.core.search import search_batch
 from repro.core.types import IndexState, SearchParams
@@ -98,6 +99,19 @@ class EngineConfig:
     #                                      dispatch (0 -> uncapped: one
     #                                      dispatch covers every in-cache
     #                                      round)
+    # -- durability (core/wal.py): WAL + epoch-fenced snapshots --
+    wal_enabled: bool = True             # log each update op to a CRC-framed
+    #                                      WAL before mutating the store;
+    #                                      reopening an engine on a disk_path
+    #                                      with a published manifest recovers
+    #                                      (snapshot + WAL replay) instead of
+    #                                      rebuilding
+    wal_group_commit: int = 8            # records per fsync (group commit);
+    #                                      1 = fsync every op
+    snapshot_every_epochs: int = 512     # update batches (write epochs)
+    #                                      between automatic snapshot
+    #                                      publications; 0 = publish only at
+    #                                      open and close
     cache_dtype: str = "bf16"            # exact-cache payload dtype:
     #                                      bf16 halves device vector bytes
     #                                      (re-rank upcasts to fp32);
@@ -107,6 +121,12 @@ class EngineConfig:
     build_cross_samples: int = 128       # cross-partition candidate columns
     #                                      per partition (graph quality at
     #                                      scale hinges on this)
+
+
+class ReadOnlyEngineError(RuntimeError):
+    """The WAL device failed: the engine degraded to read-only (searches
+    keep serving; updates raise this instead of risking an unlogged
+    mutation). ``stats()["degraded"]`` reports the mode."""
 
 
 class _SearchFuture:
@@ -289,7 +309,13 @@ class SVFusionEngine:
         self._rng = np.random.default_rng(cfg.seed)
         self._spec_rank = cfg.spec_rank    # resolved by the tiered probe
         self._spec_probe_us = None
-        init_vectors = np.asarray(init_vectors, np.float32)
+        self._wal = None                   # wal.WriteAheadLog (tiered mode)
+        self._recovery = None              # wal.recover report when reopened
+        self._durable_epoch = None         # last published manifest epoch
+        self._degraded = None              # read-only reason once WAL fails
+        self._batches_since_snapshot = 0
+        if init_vectors is not None:
+            init_vectors = np.asarray(init_vectors, np.float32)
         if cfg.pq_enabled and not cfg.disk_path:
             raise ValueError(
                 "pq_enabled requires the three-tier mode (set disk_path): "
@@ -298,6 +324,9 @@ class SVFusionEngine:
         if cfg.disk_path:
             self._init_tiered(init_vectors, cfg)
         else:
+            if init_vectors is None:
+                raise ValueError("device mode has no durable state to "
+                                 "recover: init_vectors is required")
             self._state = build_index(
                 init_vectors, degree=cfg.degree,
                 cache_slots=cfg.cache_slots, n_max=cfg.capacity)
@@ -326,16 +355,48 @@ class SVFusionEngine:
     def _init_tiered(self, init_vectors, cfg: EngineConfig):
         from repro.core.build import build_tiered_backend
         from repro.core.types import init_graph_state, init_stats
-        if len(init_vectors) < 2 * cfg.degree:
-            raise ValueError("three-tier mode needs >= 2*degree seed "
-                             "vectors to bootstrap the graph")
-        n, dim = init_vectors.shape
-        cap = cfg.disk_capacity or cfg.capacity
-        self._backend = build_tiered_backend(
-            init_vectors, cfg.degree, cfg.disk_path, disk_capacity=cap,
-            host_window=cfg.host_window, seed=cfg.seed,
-            n_partitions=cfg.build_partitions,
-            cross_samples=cfg.build_cross_samples)
+        man = walmod.load_manifest(cfg.disk_path)
+        if man is not None:
+            # crash/restart path: the directory holds a published durable
+            # epoch — recover it (snapshot + WAL replay) instead of
+            # rebuilding, and refuse ambiguous mixes loudly
+            if init_vectors is not None and len(init_vectors):
+                raise ValueError(
+                    "disk_path holds a published durable index; pass "
+                    "init_vectors=None to recover it, or point disk_path "
+                    "at a fresh directory to build")
+            if not cfg.wal_enabled:
+                raise ValueError(
+                    "disk_path holds a published durable index but "
+                    "wal_enabled=False: recovering without a WAL would "
+                    "leave subsequent updates unlogged under a manifest "
+                    "that claims durability")
+            if bool(man.get("pq")) != bool(cfg.pq_enabled):
+                raise ValueError(
+                    f"pq_enabled={cfg.pq_enabled} does not match the "
+                    f"durable index (manifest pq={man.get('pq')!r})")
+            cap = int(man["capacity"])
+            window = cfg.host_window or max(64, cap // 4)
+            self._backend, self._wal, self._recovery = walmod.recover(
+                cfg.disk_path, host_window=window,
+                group_commit=cfg.wal_group_commit)
+            self._durable_epoch = int(man["epoch"])
+            n, dim = self._backend.n, self._backend.dim
+        else:
+            if init_vectors is None or not len(init_vectors):
+                raise ValueError(
+                    "nothing to recover: disk_path has no published "
+                    "manifest and no init_vectors were given")
+            if len(init_vectors) < 2 * cfg.degree:
+                raise ValueError("three-tier mode needs >= 2*degree seed "
+                                 "vectors to bootstrap the graph")
+            n, dim = init_vectors.shape
+            cap = cfg.disk_capacity or cfg.capacity
+            self._backend = build_tiered_backend(
+                init_vectors, cfg.degree, cfg.disk_path, disk_capacity=cap,
+                host_window=cfg.host_window, seed=cfg.seed,
+                n_partitions=cfg.build_partitions,
+                cross_samples=cfg.build_cross_samples)
         if cfg.cache_dtype not in ("bf16", "fp32"):
             raise ValueError(f"cache_dtype must be bf16|fp32, got "
                              f"{cfg.cache_dtype!r}")
@@ -344,31 +405,25 @@ class SVFusionEngine:
         self._placement = Cache.HostPlacement(cap, cfg.cache_slots, dim,
                                               dtype=cache_dtype)
         if cfg.pq_enabled:
-            # codebook build at index time: train per-subspace Lloyd
-            # codebooks on a sample, encode the whole seed set, attach
-            # the unconditionally resident code lane
-            from repro.core import quant
-            m = quant.choose_m(dim, cfg.pq_m)
-            cb = quant.train_codebook(
-                init_vectors, m, cfg.pq_bits, iters=cfg.pq_train_iters,
-                sample=cfg.pq_train_sample, seed=cfg.seed)
-            self._backend.attach_pq(quant.PQCodes(
-                cb, cap, codes=quant.encode(cb, init_vectors)))
+            if self._backend.pq is None:
+                # fresh build: train per-subspace Lloyd codebooks on a
+                # sample, encode the whole seed set, attach the
+                # unconditionally resident code lane (recovery attached
+                # the lane from the persisted codebook + codes instead)
+                from repro.core import quant
+                m = quant.choose_m(dim, cfg.pq_m)
+                cb = quant.train_codebook(
+                    init_vectors, m, cfg.pq_bits, iters=cfg.pq_train_iters,
+                    sample=cfg.pq_train_sample, seed=cfg.seed)
+                self._backend.attach_pq(quant.PQCodes(
+                    cb, cap, codes=quant.encode(cb, init_vectors)))
             if cfg.topo_cache_slots >= 0:
                 # device-resident topology tier for the fused multi-round
-                # executor; 0 slots -> full residency, warmed here so the
-                # first search batch already runs at 3 dispatches/query
-                slots = cfg.topo_cache_slots or cap
-                topo = Cache.TopoCache(cap, slots, cfg.degree)
-                topo.validate(self._backend.store)
-                live = np.flatnonzero(self._backend.alive[:n])
-                if live.size > slots:   # partial cache: warm top-E_in rows
-                    live = live[np.argsort(-self._backend.e_in[live],
-                                           kind="stable")[:slots]]
-                if live.size:
-                    topo.install(live,
-                                 self._backend.store.peek_rows(live))
-                self._backend.attach_topo(topo)
+                # executor; 0 slots -> full residency, warmed so the
+                # first search batch already runs at 3 dispatches/query.
+                # A pure cache of the store's adjacency truth: recovery
+                # re-warms it here from the recovered host state.
+                Cache.warm_topo_cache(self._backend, cfg.topo_cache_slots)
         # spec_rank="auto": probe the disk tier's per-row delta-fetch
         # latency once and pick the frontier predictor from it (the right
         # default flips between page-cache-backed and real-SSD tiers).
@@ -401,6 +456,16 @@ class SVFusionEngine:
             stats=init_stats(), tiered=self._backend)
         if cfg.prefetch:
             self._backend.store.start_prefetcher()
+        if cfg.wal_enabled:
+            if man is None:
+                # epoch 0: publish the freshly built index as a durable
+                # snapshot so the first update op already logs against a
+                # recoverable base
+                manifest, self._wal = walmod.publish_snapshot(
+                    cfg.disk_path, self._backend, None,
+                    group_commit=cfg.wal_group_commit)
+                self._durable_epoch = int(manifest["epoch"])
+            self._backend.wal = self._wal
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -542,6 +607,7 @@ class SVFusionEngine:
         previous chunks built; a near-empty index is bootstrapped with an
         exact KNN stitch among the first chunk)."""
         t0 = time.perf_counter()
+        self._check_writable()
         vectors = np.asarray(vectors, np.float32)
         out = []
         with self._update_lock:
@@ -550,9 +616,12 @@ class SVFusionEngine:
                 if self._backend is not None:
                     with self._cache_lock:
                         seed = int(self._rng.integers(0, 2 ** 31 - 1))
-                    ids, rev = update.insert_tiered(
-                        self._backend, self._placement, part_np,
-                        self.cfg.search, seed)
+                    try:
+                        ids, rev = update.insert_tiered(
+                            self._backend, self._placement, part_np,
+                            self.cfg.search, seed)
+                    except walmod.WALWriteError as e:
+                        self._degrade(str(e))
                     if self._snapshot_n is not None and len(rev.v):
                         # consolidation in flight: log the window's
                         # reverse edges for the MVCC merge
@@ -572,6 +641,7 @@ class SVFusionEngine:
                             self._placement.scores(self._backend.e_in))
                     self._update_batches += 1
                     self._batches_since_repair += 1
+                    self._batches_since_snapshot += 1
                     out.append(np.asarray(ids))
                     continue
                 part = jnp.asarray(part_np)
@@ -589,6 +659,7 @@ class SVFusionEngine:
                 self._batches_since_repair += 1
                 out.append(np.asarray(ids))
         self._maybe_maintain()
+        self._maybe_checkpoint()
         self.latencies["insert"].append(time.perf_counter() - t0)
         return np.concatenate(out)
 
@@ -618,23 +689,69 @@ class SVFusionEngine:
 
     def delete(self, ids):
         t0 = time.perf_counter()
+        self._check_writable()
         with self._update_lock:
             if self._backend is not None:
-                ids_np = np.asarray(ids, np.int64)
-                # bounds-filter BEFORE any fancy index (out-of-range ids
-                # are ignored, matching delete_batch's clip semantics)
-                ids_np = ids_np[(ids_np >= 0) & (ids_np < self._backend.n)]
-                ids_np = ids_np[self._backend.alive[ids_np]]
-                self._backend.alive[ids_np] = False
-                self._backend.version[ids_np] += 1
+                # bounds/alive filtering + WAL-before-write live in
+                # update.delete_tiered (out-of-range ids are ignored,
+                # matching delete_batch's clip semantics)
+                try:
+                    update.delete_tiered(self._backend, ids)
+                except walmod.WALWriteError as e:
+                    self._degrade(str(e))
             else:
                 st2 = update.delete_batch(self._state,
                                           jnp.asarray(ids, jnp.int32))
                 self._publish(st2)
             self._update_batches += 1
             self._batches_since_repair += 1
+            self._batches_since_snapshot += 1
         self._maybe_maintain()
+        self._maybe_checkpoint()
         self.latencies["delete"].append(time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    # durability (core/wal.py)
+    def _check_writable(self):
+        if self._degraded:
+            raise ReadOnlyEngineError(
+                f"engine is read-only (WAL degraded): {self._degraded}")
+
+    def _degrade(self, reason: str):
+        """WAL device failure: graceful degradation to read-only. The
+        failing op was NOT applied (WAL-before-write); searches keep
+        serving the pre-failure state."""
+        self._degraded = reason
+        raise ReadOnlyEngineError(
+            f"WAL write failed; engine degraded to read-only: {reason}")
+
+    def checkpoint(self) -> Optional[int]:
+        """Publish the current state as a durable epoch (fsync'd snapshot
+        + manifest rename + WAL segment rotation; see
+        ``wal.publish_snapshot``). Returns the published epoch, or None
+        when the engine has no WAL (device mode / wal_enabled=False)."""
+        if self._wal is None or self._wal.closed:
+            return None
+        self._check_writable()
+        with self._update_lock:
+            try:
+                manifest, new_wal = walmod.publish_snapshot(
+                    self.cfg.disk_path, self._backend, self._wal,
+                    group_commit=self.cfg.wal_group_commit)
+            except (OSError, walmod.WALWriteError) as e:
+                self._degrade(f"snapshot publish failed: {e}")
+            self._wal = new_wal
+            self._backend.wal = new_wal
+            self._durable_epoch = int(manifest["epoch"])
+            self._batches_since_snapshot = 0
+        return self._durable_epoch
+
+    def _maybe_checkpoint(self):
+        k = self.cfg.snapshot_every_epochs
+        if (self._wal is None or self._degraded or k <= 0
+                or self._batches_since_snapshot < k):
+            return
+        self.checkpoint()
 
     # ------------------------------------------------------------------
     def _maybe_maintain(self):
@@ -733,6 +850,10 @@ class SVFusionEngine:
                     mvcc.merge_consolidated_tiered(
                         self._backend, snap, new_rows,
                         list(self._rev_logs))
+            except walmod.WALWriteError as e:
+                # merge not applied (WAL-before-write): degrade to
+                # read-only instead of dying silently in the background
+                self._degraded = str(e)
             finally:
                 with self._state_lock:
                     self._snapshot_n = None
@@ -797,6 +918,20 @@ class SVFusionEngine:
             d["spec_rank_resolved"] = self._spec_rank
             if self._spec_probe_us is not None:
                 d["spec_probe_us_per_row"] = self._spec_probe_us
+            # durability: degraded flag is the graceful-degradation
+            # contract (WAL device failed -> read-only, not a crash)
+            d["degraded"] = bool(self._degraded)
+            d["wal_enabled"] = self._wal is not None
+            if self._wal is not None:
+                d["wal_last_seq"] = self._wal.last_seq
+                d["wal_records"] = self._wal.appended
+                d["durable_epoch"] = self._durable_epoch
+            if self._recovery is not None:
+                d["recovered_epoch"] = self._recovery["epoch"]
+                d["recovered_replayed"] = self._recovery["replayed"]
+                d["recovered_to_seq"] = self._recovery["last_seq"]
+                d["recovered_truncated_bytes"] = \
+                    self._recovery["truncated_bytes"]
             dim = self._backend.dim
             # per-tier byte footprint: PQ codes give FULL-coverage device
             # distance evaluation in n·m bytes where the exact lane would
@@ -846,13 +981,22 @@ class SVFusionEngine:
         return d
 
     def close(self):
-        """Stop background machinery and flush the disk tier (no-op in
-        device mode)."""
+        """Stop background machinery, publish a final durable epoch (so a
+        clean shutdown reopens with zero WAL replay) and flush the disk
+        tier (no-op in device mode)."""
         self.wait_background()
         if self._coalescer is not None:
             self._coalescer.stop()
+        if self._wal is not None and not self._degraded \
+                and not self._wal.closed:
+            try:
+                self.checkpoint()
+            except ReadOnlyEngineError:   # WAL device died at shutdown:
+                pass                      # last published epoch still wins
         if self._backend is not None:
             self._backend.close()
+        if self._wal is not None:
+            self._wal.close()
 
 
 class MultiStreamRunner:

@@ -115,7 +115,15 @@ def merge_consolidated_tiered(backend, snap: TieredSnapshot, new_rows,
     recomputed between batches, exactly as the live path applied them —
     one concatenated one-shot replay would collapse every window edge of
     a target onto a single slot and drop acknowledged edges). Caller
-    serializes with the update stream."""
+    serializes with the update stream.
+
+    Durability (core/wal.py): the merge's full edit set — every (ids,
+    rows) group it will write — is collected FIRST, logged as ONE
+    CONSOLIDATE record when a WAL is attached, then applied by
+    ``apply_merge_edits`` (the same function WAL replay calls). The merge
+    is thereby atomic across a crash: a committed record means recovery
+    completes it, a torn record means it never happened — either way the
+    store is a state the uninterrupted run passed through."""
     store = backend.store
     R = backend.degree
     alive = backend.alive
@@ -142,57 +150,98 @@ def merge_consolidated_tiered(backend, snap: TieredSnapshot, new_rows,
     rows[(rows >= 0) & ~alive[np.clip(rows, 0, None)]] = -1
     rows[~alive[:snap.n]] = -1
 
-    # publish ONLY rows the rebuild/replay/scrub actually changed vs the
-    # frozen topology; untouched rows keep their live store contents
+    # collect the edit set WITHOUT touching the store, so it can be WAL-
+    # logged as one atomic record before any byte moves. Edits name ONLY
+    # rows the rebuild/replay/scrub actually changed vs the frozen
+    # topology; untouched rows keep their live store contents
     # (live-applied window reverse edges on a consolidation-untouched row
     # are bitwise-identical to the replay's result, so skipping them is
-    # exact). e_in updates incrementally from the same edit set — the
-    # caller holds the update lock, so the critical section must be
-    # proportional to the consolidation's edit set, not the dataset.
-    e_in = backend.e_in.copy()
+    # exact) — the caller holds the update lock, so the critical section
+    # must be proportional to the consolidation's edit set, not the
+    # dataset.
     changed = np.where((rows != snap.rows).any(axis=1))[0]
-    for s in range(0, changed.size, chunk):
-        ids = changed[s:s + chunk]
-        old = store.peek_rows(ids)
-        np.subtract.at(e_in, old[old >= 0], 1)
-        new = rows[ids]
-        np.add.at(e_in, new[new >= 0], 1)
-        store.write(ids, None, new)
-    backend.version[changed] += 1
+    edits = [(changed, rows[changed])]
+    is_changed = np.zeros((snap.n,), bool)
+    is_changed[changed] = True
 
     # live rows untouched by the rebuild may still carry reverse edges
     # (applied during the window) to vertices inserted and then deleted
     # within the same window — the replay filter drops those edges from
     # `rows`, leaving rows[u] == snap.rows[u] and u outside `changed`.
     # Every such row is named as a target by the logs, so the scrub set
-    # stays bounded by window activity.
+    # stays bounded by window activity. The scrub is computed against the
+    # state the changed-group writes WILL leave (overlay), preserving the
+    # sequential read-after-write semantics of the pre-WAL merge.
     stale = np.unique(np.concatenate(
         [np.asarray(log.v, np.int64)[
             ~alive[np.clip(np.asarray(log.v_new, np.int64), 0, None)]]
          for log in rev_logs] or [np.zeros((0,), np.int64)]))
     stale = stale[(stale >= 0) & (stale < snap.n)]
+    s_ids, s_rows = [], []
     for s in range(0, stale.size, chunk):
         ids = stale[s:s + chunk]
         r = store.peek_rows(ids)
+        m = is_changed[ids]
+        if m.any():
+            r[m] = rows[ids[m]]
         dead = (r >= 0) & ~alive[np.clip(r, 0, None)]
         if dead.any():
-            np.subtract.at(e_in, r[dead], 1)
             r[dead] = -1
-            store.write(ids, None, r)
-            backend.version[ids[dead.any(axis=1)]] += 1
+            sel = dead.any(axis=1)
+            s_ids.append(ids[sel])
+            s_rows.append(r[sel])
+    if s_ids:
+        edits.append((np.concatenate(s_ids), np.concatenate(s_rows)))
 
     # incremental subgraph appending: rows past the snapshot stay
     # verbatim except that window deletions are authoritative there too
     # (a window insert may have linked to a vertex deleted later in the
     # window)
     n = backend.n
+    a_ids, a_rows = [], []
     for s in range(snap.n, n, chunk):
         ids = np.arange(s, min(s + chunk, n))
         r = store.peek_rows(ids)
         dead = (r >= 0) & ~alive[np.clip(r, 0, None)]
         if dead.any():
-            np.subtract.at(e_in, r[dead], 1)
             r[dead] = -1
-            store.write(ids, None, r)
-            backend.version[ids[dead.any(axis=1)]] += 1
+            sel = dead.any(axis=1)
+            a_ids.append(ids[sel])
+            a_rows.append(r[sel])
+    if a_ids:
+        edits.append((np.concatenate(a_ids), np.concatenate(a_rows)))
+
+    if backend.wal is not None:
+        from repro.core import wal as walmod
+        backend.wal.append(walmod.REC_CONSOLIDATE, {
+            "ids": [np.asarray(g[0], np.int64) for g in edits],
+            "rows": [np.asarray(g[1], np.int32) for g in edits]})
+    apply_merge_edits(backend, edits, chunk=chunk)
+
+
+def apply_merge_edits(backend, edits, chunk=4096) -> None:
+    """Mutation half of ``merge_consolidated_tiered``, shared verbatim
+    with WAL replay: write each (ids, rows) edit group in order, with
+    incremental e_in accounting against the rows being replaced (entries
+    a group leaves in place cancel exactly, so full-row subtract/add
+    equals the per-entry deltas of the pre-WAL merge). e_in is published
+    in one assignment at the end, like every directory update."""
+    from repro.core.wal import crash_point
+    store = backend.store
+    e_in = backend.e_in.copy()
+    first = True
+    for gids, grows in edits:
+        gids = np.asarray(gids, np.int64)
+        grows = np.asarray(grows, np.int32)
+        for s in range(0, gids.size, chunk):
+            ids = gids[s:s + chunk]
+            new = grows[s:s + chunk]
+            old = store.peek_rows(ids)
+            np.subtract.at(e_in, old[old >= 0], 1)
+            np.add.at(e_in, new[new >= 0], 1)
+            store.write(ids, None, new)
+            backend.version[ids] += 1
+            if first:               # merge partially published, rest pending
+                crash_point("mid_consolidation_merge")
+                first = False
     backend.e_in = e_in

@@ -152,6 +152,19 @@ def encode(codebook: PQCodebook, vectors, chunk: int = 4096) -> np.ndarray:
     return out
 
 
+def codebook_to_array(codebook: PQCodebook) -> np.ndarray:
+    """Host array form of the frozen centroid tables, for the durability
+    snapshot (``wal.publish_snapshot``)."""
+    return np.asarray(codebook.centroids, np.float32)
+
+
+def codebook_from_array(centroids: np.ndarray) -> PQCodebook:
+    """Rebuild the codebook from a persisted centroid array. Encoding is
+    deterministic given the centroids, so replayed inserts re-encode to
+    the same codes the crashed run wrote."""
+    return PQCodebook(centroids=jnp.asarray(centroids, jnp.float32))
+
+
 def decode(codebook: PQCodebook, codes) -> np.ndarray:
     """Codes [n, m] -> reconstructed vectors [n, D] float32."""
     codes = np.asarray(codes)
@@ -227,6 +240,13 @@ class PQCodes:
                 self._codes_j = self._codes_j.at[ids].set(self.codes[ids])
                 self._dirty.clear()
             return self._codes_j
+
+    def snapshot(self, n: int) -> np.ndarray:
+        """Consistent copy of the host-truth codes over [0, n) for the
+        durability snapshot — taken under the write-through lock so a
+        concurrent ``encode_write`` can never tear the cut."""
+        with self._lock:
+            return self.codes[:n].copy()
 
     def code_bytes(self, n: int = None) -> int:
         """Device-resident code footprint (bytes) over ``n`` ids (whole

@@ -54,8 +54,17 @@ class DiskTier:
         return np.asarray(self.vec[ids]), np.asarray(self.nbr[ids])
 
     def flush(self):
-        self.vec.flush()
-        self.nbr.flush()
+        """Durable flush: ``mmap.flush`` writes dirty pages back but does
+        not guarantee they reach stable storage on all platforms — follow
+        with an ``os.fsync`` on each backing file (an O_RDONLY fd is
+        enough to fsync on POSIX)."""
+        for mm in (self.vec, self.nbr):
+            mm.flush()
+            fd = os.open(mm.filename, os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
 
 
 class TieredStore:
@@ -234,6 +243,9 @@ class TieredStore:
 
     # -- async prefetch ---------------------------------------------------
     def start_prefetcher(self):
+        if self._stop.is_set():     # stop() is terminal (close in flight)
+            return
+
         def work():
             while not self._stop.is_set():
                 try:
@@ -263,15 +275,26 @@ class TieredStore:
                 self.prefetched += int(still.sum())
 
     def prefetch(self, ids, f_lambda: Optional[np.ndarray] = None):
+        if self._stop.is_set():
+            return                  # shutdown in flight: never enqueue work
+            #                         the closing disk tier would receive
         try:
             self._prefetch_q.put_nowait((np.asarray(ids), f_lambda))
         except queue.Full:
             self.prefetch_dropped += len(ids)  # overload: drop, don't lag
 
     def stop(self):
+        """Terminal shutdown: the worker MUST be joined before the caller
+        closes/flushes the disk tier, or an in-flight ``_prefetch_one``
+        can still be mid-write when the memmaps go away. ``prefetch`` and
+        ``start_prefetcher`` are no-ops afterwards."""
         self._stop.set()
-        if self._th:
-            self._th.join(timeout=2.0)
+        th = self._th
+        if th is not None:
+            th.join(timeout=10.0)
+            if th.is_alive():       # pragma: no cover - worker is bounded
+                raise RuntimeError("prefetcher failed to stop; refusing to "
+                                   "close the disk tier under it")
             self._th = None
 
     @property
@@ -311,6 +334,10 @@ class TieredBackend:
         #                     device-resident adjacency rows for the fused
         #                     multi-round executor, F_λ-ordered residency,
         #                     epoch-fenced against store writes
+        self.wal = None     # wal.WriteAheadLog: when attached, the update
+        #                     path logs each op BEFORE mutating the store
+        #                     (recovery replays the log over the last
+        #                     published snapshot); owned by the engine
 
     def attach_topo(self, topo) -> None:
         """Attach the device-resident topology row cache
@@ -392,6 +419,8 @@ class TieredBackend:
         return out
 
     def close(self):
+        # join the prefetcher BEFORE flushing/abandoning the memmaps: a
+        # worker mid-``_prefetch_one`` must never outlive the disk tier
         self.store.stop()
         self.store.disk.flush()
 

@@ -240,6 +240,14 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     Returns ``(new_ids, RevLog)`` — the reverse-edge triplet log (numpy
     arrays) is consumed by the tiered MVCC merge when a consolidation
     snapshot is in flight. Caller serializes (engine update stream).
+
+    Durability split (core/wal.py): the op's FULL effect — selected rows
+    and reverse-edge triplets — is computed here against the unmutated
+    store (every reverse-edge target pre-exists the batch, so its vector
+    is already durable), logged to the WAL when one is attached, and only
+    then applied by ``apply_insert_tiered`` — the same function crash
+    recovery replays, so a recovered index is bit-identical to an
+    uninterrupted run by construction.
     """
     from repro.core.search import search_tiered
     store = backend.store
@@ -266,19 +274,8 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     cand_rows[cand_ids < 0] = -1
     sel = rank_based_reorder_host(cand_ids, cand_d, cand_rows, R)
 
-    # establish new vertices (write-through keeps the overlay coherent);
-    # the PQ code lane encodes incrementally against its frozen codebook
-    # so the device-resident ADC scan covers the new ids from the next
-    # search's epoch sync onward
-    store.write(ids, new_vecs, sel)
-    if backend.pq is not None:
-        backend.pq.encode_write(ids, new_vecs)
-    backend.alive[ids] = True
-    backend.version[ids] = 1
-    np.add.at(backend.e_in, sel[sel >= 0], 1)
-    backend.n = int(n0 + Bi)
-
-    # reverse edges (flattened over the batch, original-rows semantics)
+    # reverse-edge triplets, pre-mutation (targets all pre-exist: their
+    # vectors are immutable and the distances are computable now)
     flat_t = sel.reshape(-1).astype(np.int64)
     flat_new = np.repeat(ids, R)
     ok = flat_t >= 0
@@ -286,18 +283,90 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     d_edge = np.zeros((0,), np.float32)
     if flat_t.size:
         ut, inv = np.unique(flat_t, return_inverse=True)
+        tvec, _ = store.fetch(ut, f_lam)
+        d_edge = ((tvec[inv] - new_vecs[(flat_new - n0)]) ** 2).sum(-1)
+    rev = RevLog(flat_t.astype(np.int64), flat_new.astype(np.int64),
+                 np.asarray(d_edge, np.float32))
+
+    if backend.wal is not None:
+        from repro.core import wal as walmod
+        backend.wal.append(walmod.REC_INSERT, {
+            "ids": ids, "vecs": new_vecs, "sel": sel,
+            "rev_v": rev.v, "rev_vn": rev.v_new, "rev_d": rev.d})
+    apply_insert_tiered(backend, ids, new_vecs, sel, rev, f_lam=f_lam)
+    return ids, rev
+
+
+def apply_insert_tiered(backend, ids, new_vecs, sel, rev: RevLog,
+                        f_lam=None) -> None:
+    """Mutation half of ``insert_tiered``, shared verbatim with WAL
+    replay (``wal.recover``): establish the new vertices, encode their PQ
+    codes against the frozen codebook, then apply the logged reverse
+    edges onto freshly fetched target rows. Replaying this over the
+    snapshot's state walks the store through the exact same write
+    sequence as the live run."""
+    from repro.core.wal import crash_point
+    store = backend.store
+    ids = np.asarray(ids, np.int64)
+    new_vecs = np.asarray(new_vecs, np.float32)
+    if not len(ids):
+        return
+    n0 = int(ids[0])
+    if n0 != backend.n:
+        raise ValueError(f"insert replay out of order: record starts at id "
+                         f"{n0}, store high-water mark is {backend.n}")
+    R = backend.degree
+
+    # establish new vertices (write-through keeps the overlay coherent);
+    # the PQ code lane encodes incrementally against its frozen codebook
+    # so the device-resident ADC scan covers the new ids from the next
+    # search's epoch sync onward
+    store.write(ids, new_vecs, sel)
+    crash_point("mid_memmap_write")   # new rows written, reverse edges not
+    if backend.pq is not None:
+        backend.pq.encode_write(ids, new_vecs)
+    backend.alive[ids] = True
+    backend.version[ids] = 1
+    sel = np.asarray(sel, np.int32)
+    np.add.at(backend.e_in, sel[sel >= 0], 1)
+    backend.n = int(n0 + len(ids))
+
+    # reverse edges (flattened over the batch, original-rows semantics)
+    v = np.asarray(rev.v, np.int64)
+    if v.size:
+        v_new = np.asarray(rev.v_new, np.int64)
+        d_edge = np.asarray(rev.d, np.float32)
+        ut, inv = np.unique(v, return_inverse=True)
         tvec, trow = store.fetch(ut, f_lam)
         rvec, _ = store.peek(np.clip(trow, 0, None).reshape(-1))
-        d_edge = ((tvec[inv] - new_vecs[(flat_new - n0)]) ** 2).sum(-1)
         new_rows = reverse_edge_rows_host(
-            trow, tvec, rvec.reshape(ut.size, R, -1), inv, flat_new, d_edge)
+            trow, tvec, rvec.reshape(ut.size, R, -1), inv, v_new, d_edge)
         np.add.at(backend.e_in, trow[trow >= 0], -1)
         np.add.at(backend.e_in, new_rows[new_rows >= 0], 1)
         store.write(ut, None, new_rows)
         backend.version[ut] += 1
-    rev = RevLog(flat_t.astype(np.int64), flat_new.astype(np.int64),
-                 np.asarray(d_edge, np.float32))
-    return ids, rev
+
+
+def delete_tiered(backend, ids) -> np.ndarray:
+    """Logical deletion on the tiered backend (stage 1, paper §5.2.1):
+    bounds-filter, drop already-dead ids, WAL the surviving set, then
+    flip the bitset. Returns the ids actually deleted. Caller serializes
+    (engine update stream)."""
+    ids_np = np.asarray(ids, np.int64)
+    ids_np = ids_np[(ids_np >= 0) & (ids_np < backend.n)]
+    ids_np = ids_np[backend.alive[ids_np]]
+    if backend.wal is not None and ids_np.size:
+        from repro.core import wal as walmod
+        backend.wal.append(walmod.REC_DELETE, {"ids": ids_np})
+    apply_delete_tiered(backend, ids_np)
+    return ids_np
+
+
+def apply_delete_tiered(backend, ids_np) -> None:
+    """Mutation half of ``delete_tiered`` (records are pre-filtered)."""
+    ids_np = np.asarray(ids_np, np.int64)
+    backend.alive[ids_np] = False
+    backend.version[ids_np] += 1
 
 
 def consolidate_tiered(backend, chunk=256, *, snapshot=None):

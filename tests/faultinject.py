@@ -1,0 +1,220 @@
+"""Fault-injection harness for the durability subsystem (core/wal.py).
+
+Two halves:
+
+* ``arm(name)`` — in-process: installs a crash hook that ``os._exit(137)``s
+  the process the Nth time execution passes the named crash point
+  (``wal.CRASH_POINTS``), simulating a kill -9 at exactly that site.
+
+* a subprocess driver (``python tests/faultinject.py <workload> <mode>``)
+  that ``tests/test_durability.py`` runs as a child process so the crash
+  actually kills something. Three modes over a deterministic workload
+  (fixed dataset seed, fixed per-op arguments, no background scheduling —
+  coalescer / speculation / prefetcher all off, fp32 cache):
+
+  - ``crash``   build a fresh index in ``--dir``, run the workload, arm
+                ``--crash-point`` just before op ``--crash-op``; the
+                process must die with exit code 137 inside that op.
+  - ``reopen``  recover the index from ``--dir`` (no init vectors) and
+                dump a state digest (search results + full store state +
+                the recovered WAL position) to ``--out``.
+  - ``clean``   build the same index in a FRESH ``--dir`` and run exactly
+                the first ``--records`` record-producing ops (checkpoints
+                skipped — they never touch logical state), then dump the
+                same digest to ``--out``.
+
+The parent asserts the reopen digest is bit-identical to the clean digest
+for the record-prefix the WAL proves durable: recovery lands the store in
+a state the uninterrupted run passed through, never a torn one.
+
+Every record-producing op maps to exactly ONE WAL record (inserts stay
+under the engine's 512-row chunk, deletes are non-empty and disjoint, a
+consolidation logs one CONSOLIDATE record), so the recovered WAL position
+``last_seq`` IS the count of durable record ops — the parent derives the
+clean run's ``--records`` from it and cross-checks the expected value per
+crash point.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import wal as walmod                       # noqa: E402
+
+N, D, N0 = 768, 16, 256
+SEARCH_SEED = 4242
+CRASH_EXIT = 137
+
+# op kinds: ("insert", (lo, hi)) | ("delete", (lo, hi)) |
+#           ("consolidate", None) | ("checkpoint", None)
+# Record-producing ops are everything but "checkpoint". Delete ranges are
+# disjoint and target live ids only, so none filters down to empty.
+WORKLOADS = {
+    "insert_heavy": [
+        ("insert", (256, 288)), ("insert", (288, 320)), ("insert", (320, 352)),
+        ("checkpoint", None),
+        ("insert", (352, 384)), ("insert", (384, 416)), ("insert", (416, 448)),
+    ],
+    "delete_heavy": [
+        ("insert", (256, 320)), ("delete", (10, 40)), ("insert", (320, 384)),
+        ("delete", (300, 330)),
+        ("checkpoint", None),
+        ("delete", (50, 80)), ("insert", (384, 448)),
+    ],
+    "consolidation": [
+        ("insert", (256, 320)), ("delete", (0, 64)), ("delete", (100, 164)),
+        ("consolidate", None), ("insert", (320, 384)),
+    ],
+}
+# PQ variants exercise codebook persistence + replay re-encoding
+WORKLOADS["insert_heavy_pq"] = WORKLOADS["insert_heavy"]
+WORKLOADS["consolidation_pq"] = WORKLOADS["consolidation"]
+
+
+def arm(name: str, hits: int = 1) -> None:
+    """Die with exit code 137 (kill -9's signature) the ``hits``-th time
+    execution reaches crash point ``name``."""
+    state = {"count": 0}
+
+    def hook(point: str) -> None:
+        if point == name:
+            state["count"] += 1
+            if state["count"] >= hits:
+                os._exit(CRASH_EXIT)
+
+    walmod.set_crash_hook(hook)
+
+
+def record_ops(ops):
+    return [op for op in ops if op[0] != "checkpoint"]
+
+
+def expected_records(ops, crash_point: str, crash_op: int) -> int:
+    """Durable WAL records after a crash at ``crash_point`` inside op
+    ``crash_op``: every record op before it, plus the crashing op's own
+    record when the point sits after its WAL append."""
+    k = sum(1 for kind, _ in ops[:crash_op] if kind != "checkpoint")
+    if crash_point in ("post_wal_append", "mid_memmap_write",
+                       "mid_consolidation_merge"):
+        k += 1
+    return k
+
+
+def dataset() -> np.ndarray:
+    return np.random.default_rng(7).normal(size=(N, D)).astype(np.float32)
+
+
+def make_config(disk_path: str, pq: bool):
+    from repro.core.engine import EngineConfig
+    from repro.core.types import SearchParams
+    return EngineConfig(
+        degree=8, cache_slots=64, capacity=2048,
+        search=SearchParams(k=8, pool=32, max_iters=32),
+        disk_path=str(disk_path), disk_capacity=2048, host_window=96,
+        seed=0, prefetch=False, speculate=False, coalesce=False,
+        cache_dtype="fp32",
+        consolidate_threshold=2.0,      # never auto-consolidate
+        wal_enabled=True, wal_group_commit=4,
+        snapshot_every_epochs=0,        # checkpoints only where scripted
+        pq_enabled=pq, pq_m=4, pq_bits=6, pq_train_sample=512,
+        rerank_depth=32)
+
+
+def run_ops(eng, data, ops, *, crash_op=None, crash_point=None,
+            max_records=None) -> int:
+    done = 0
+    for i, (kind, arg) in enumerate(ops):
+        if max_records is not None:
+            if kind == "checkpoint":
+                continue                # durability-only: no logical effect
+            if done >= max_records:
+                break
+        if crash_op is not None and i == crash_op:
+            arm(crash_point)
+        if kind == "insert":
+            eng.insert(data[arg[0]:arg[1]])
+        elif kind == "delete":
+            eng.delete(np.arange(arg[0], arg[1]))
+        elif kind == "consolidate":
+            eng._consolidate_tiered_async(wait=True)
+        elif kind == "checkpoint":
+            eng.checkpoint()
+        if kind != "checkpoint":
+            done += 1
+    return done
+
+
+def dump_digest(eng, out_path: str, last_seq: int) -> None:
+    """Full logical-state digest: parity search results plus every host
+    structure recovery rebuilds. Bit-compared by the parent."""
+    from repro.core.search import search_tiered
+    from repro.core.types import SearchParams
+    b = eng._backend
+    n = int(b.n)
+    q = np.random.default_rng(SEARCH_SEED).normal(size=(8, D)) \
+        .astype(np.float32)
+    res = search_tiered(b, eng._placement, q, SEARCH_SEED,
+                        SearchParams(k=8, pool=32, max_iters=32),
+                        speculate=False)
+    ids = np.arange(n)
+    arrays = dict(ids=np.asarray(res.ids), dists=np.asarray(res.dists),
+                  nbr=b.store.peek_rows(ids), vec=b.store.peek(ids)[0],
+                  alive=b.alive[:n].copy(), e_in=b.e_in.copy(),
+                  version=b.version.copy(), n=np.asarray(n, np.int64),
+                  last_seq=np.asarray(int(last_seq), np.int64))
+    if b.pq is not None:
+        arrays["pq_codes"] = b.pq.codes[:n].copy()
+        from repro.core import quant
+        arrays["pq_centroids"] = quant.codebook_to_array(b.pq.codebook)
+    np.savez(out_path, **arrays)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("workload", choices=sorted(WORKLOADS))
+    ap.add_argument("mode", choices=["crash", "reopen", "clean"])
+    ap.add_argument("--dir", required=True, help="index directory")
+    ap.add_argument("--out", help="digest .npz path (reopen/clean)")
+    ap.add_argument("--crash-point", choices=walmod.CRASH_POINTS)
+    ap.add_argument("--crash-op", type=int)
+    ap.add_argument("--records", type=int,
+                    help="clean mode: record-op prefix length to run")
+    a = ap.parse_args(argv)
+
+    from repro.core.engine import SVFusionEngine
+    data = dataset()
+    ops = WORKLOADS[a.workload]
+    cfg = make_config(a.dir, pq=a.workload.endswith("_pq"))
+
+    if a.mode == "crash":
+        eng = SVFusionEngine(data[:N0], cfg)
+        run_ops(eng, data, ops, crash_op=a.crash_op,
+                crash_point=a.crash_point)
+        return 3                        # armed crash never fired
+
+    if a.mode == "reopen":
+        eng = SVFusionEngine(None, cfg)          # recover from --dir
+        last_seq = int(eng.stats()["recovered_to_seq"])
+        dump_digest(eng, a.out, last_seq)
+        eng.close()
+        return 0
+
+    eng = SVFusionEngine(data[:N0], cfg)         # clean
+    done = run_ops(eng, data, ops, max_records=a.records)
+    if done != a.records:
+        print(f"clean run executed {done} record ops, wanted {a.records}",
+              file=sys.stderr)
+        return 4
+    dump_digest(eng, a.out, a.records)
+    eng.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

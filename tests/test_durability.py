@@ -1,0 +1,338 @@
+"""Durability subsystem tests (core/wal.py): WAL framing, torn-tail
+truncation, group commit, snapshot/manifest contracts, degraded mode,
+fsync'd flush, prefetcher shutdown — and the subprocess crash matrix:
+kill -9 (``os._exit(137)`` via ``tests/faultinject.py``) at every named
+crash point, reopen, and bit-compare the recovered state against an
+uninterrupted run of the durable record prefix.
+
+A representative slice of the matrix runs in tier-1; set
+``SVF_DURABILITY_FULL=1`` (``make verify-durability``) for the full
+crash-point x workload grid including the PQ variants.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.join(ROOT, "tests"))
+
+import faultinject                                         # noqa: E402
+from repro.core import wal as walmod                       # noqa: E402
+
+DRIVER = os.path.join(ROOT, "tests", "faultinject.py")
+
+
+# ---------------------------------------------------------------------------
+# WAL framing / segment mechanics (no engine)
+# ---------------------------------------------------------------------------
+
+def test_wal_frame_roundtrip(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = walmod.WriteAheadLog(p, group_commit=1)
+    payload = {"ids": np.arange(4), "note": "x"}
+    assert w.append(walmod.REC_DELETE, payload) == 1
+    assert w.append(walmod.REC_INSERT, {"ids": np.arange(2)}) == 2
+    w.close()
+    recs, valid = walmod.read_records(p)
+    assert [(r[0], r[1]) for r in recs] == [(walmod.REC_DELETE, 1),
+                                            (walmod.REC_INSERT, 2)]
+    assert np.array_equal(recs[0][2]["ids"], np.arange(4))
+    assert valid == os.path.getsize(p)
+
+
+def test_wal_torn_tail_truncated(tmp_path):
+    p = tmp_path / "w.log"
+    w = walmod.WriteAheadLog(str(p), group_commit=1)
+    w.append(walmod.REC_DELETE, {"ids": np.arange(3)})
+    w.append(walmod.REC_DELETE, {"ids": np.arange(5)})
+    w.close()
+    good = p.read_bytes()
+
+    # a frame torn mid-body (crashed group-commit batch)
+    torn = walmod._frame(walmod.REC_DELETE, 3, {"ids": np.arange(9)})[:-4]
+    p.write_bytes(good + torn)
+    recs, valid = walmod.read_records(str(p))
+    assert [r[1] for r in recs] == [1, 2] and valid == len(good)
+
+    # raw garbage (bad magic)
+    p.write_bytes(good + b"garbage!")
+    recs, valid = walmod.read_records(str(p))
+    assert [r[1] for r in recs] == [1, 2] and valid == len(good)
+
+
+def test_wal_corrupt_record_stops_scan(tmp_path):
+    p = tmp_path / "w.log"
+    f1 = walmod._frame(walmod.REC_DELETE, 1, {"a": 1})
+    f2 = walmod._frame(walmod.REC_DELETE, 2, {"b": 2})
+    f3 = walmod._frame(walmod.REC_DELETE, 3, {"c": 3})
+    bad = bytearray(f1 + f2 + f3)
+    bad[len(f1) + walmod._HDR.size] ^= 0x5A        # flip a byte in f2's body
+    p.write_bytes(bytes(bad))
+    recs, valid = walmod.read_records(str(p))
+    # the scan must stop AT the corrupt record, not skip over it: ops are
+    # causally ordered, so replaying f3 without f2 would be wrong
+    assert [r[1] for r in recs] == [1] and valid == len(f1)
+
+
+def test_wal_group_commit_batches(tmp_path):
+    w = walmod.WriteAheadLog(str(tmp_path / "w.log"), group_commit=3)
+    w.append(walmod.REC_DELETE, {"i": 0})
+    w.append(walmod.REC_DELETE, {"i": 1})
+    assert w.appended == 2 and w.synced == 0       # fsync deferred
+    w.append(walmod.REC_DELETE, {"i": 2})
+    assert w.synced == 3                           # batch boundary fsyncs
+    w.append(walmod.REC_DELETE, {"i": 3})
+    assert w.synced == 3
+    w.sync()
+    assert w.synced == 4
+    w.close()
+    assert w.last_seq == 4
+
+
+def test_wal_poisoned_after_write_error(tmp_path):
+    w = walmod.WriteAheadLog(str(tmp_path / "w.log"), group_commit=1)
+    w._f.close()                                   # simulate device failure
+    with pytest.raises(walmod.WALWriteError):
+        w.append(walmod.REC_DELETE, {"i": 0})
+    assert w.failed
+    with pytest.raises(walmod.WALWriteError):      # stays poisoned
+        w.append(walmod.REC_DELETE, {"i": 1})
+
+
+# ---------------------------------------------------------------------------
+# Engine-level durability (in-process)
+# ---------------------------------------------------------------------------
+
+def _engine(tmp_path, pq=False, **over):
+    from repro.core.engine import SVFusionEngine
+    cfg = faultinject.make_config(str(tmp_path / "store"), pq=pq)
+    cfg = dataclasses.replace(cfg, **over)
+    data = faultinject.dataset()
+    return SVFusionEngine(data[:faultinject.N0], cfg), cfg, data
+
+
+def test_clean_close_reopen_zero_replay_parity(tmp_path):
+    from repro.core.engine import SVFusionEngine
+    from repro.core.search import search_tiered
+    from repro.core.types import SearchParams
+    eng, cfg, data = _engine(tmp_path)
+    eng.insert(data[256:320])
+    eng.delete(np.arange(10, 40))
+    q = np.random.default_rng(1).normal(size=(6, faultinject.D)) \
+        .astype(np.float32)
+    sp = SearchParams(k=8, pool=32, max_iters=32)
+    r1 = search_tiered(eng._backend, eng._placement, q, 99, sp,
+                       speculate=False)
+    nbr1 = eng._backend.store.peek_rows(np.arange(eng._backend.n))
+    eng.close()
+
+    eng2 = SVFusionEngine(None, cfg)
+    st = eng2.stats()
+    assert st["recovered_replayed"] == 0           # close() checkpointed
+    assert st["degraded"] is False
+    r2 = search_tiered(eng2._backend, eng2._placement, q, 99, sp,
+                       speculate=False)
+    assert np.array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    assert np.array_equal(np.asarray(r1.dists), np.asarray(r2.dists))
+    assert np.array_equal(nbr1,
+                          eng2._backend.store.peek_rows(
+                              np.arange(eng2._backend.n)))
+    eng2.close()
+
+
+def test_reopen_without_close_replays_wal(tmp_path):
+    """Abandoning the engine (no close, no checkpoint) must still recover
+    every op: the WAL is unbuffered, so appended records are visible to a
+    reader even while the writer lives."""
+    from repro.core.engine import SVFusionEngine
+    eng, cfg, data = _engine(tmp_path, wal_group_commit=1)
+    eng.insert(data[256:320])
+    eng.delete(np.arange(5, 25))
+    n1 = int(eng._backend.n)
+    alive1 = eng._backend.alive[:n1].copy()
+    e_in1 = eng._backend.e_in.copy()
+    # no close: simulate the process simply going away
+    eng2 = SVFusionEngine(None, cfg)
+    st = eng2.stats()
+    assert st["recovered_replayed"] == 2
+    assert int(eng2._backend.n) == n1
+    assert np.array_equal(alive1, eng2._backend.alive[:n1])
+    assert np.array_equal(e_in1, eng2._backend.e_in)
+    eng2.close()
+
+
+def test_manifest_contract_errors(tmp_path):
+    from repro.core.engine import SVFusionEngine
+    eng, cfg, data = _engine(tmp_path)
+    eng.close()
+    # a published index refuses fresh init vectors (would shadow it)
+    with pytest.raises(ValueError, match="recover"):
+        SVFusionEngine(data[:faultinject.N0], cfg)
+    # ...and refuses to open with the WAL disabled (silent divergence)
+    with pytest.raises(ValueError, match="wal"):
+        SVFusionEngine(None, dataclasses.replace(cfg, wal_enabled=False))
+    # an empty directory has nothing to recover
+    cfg3 = dataclasses.replace(cfg, disk_path=str(tmp_path / "empty"))
+    with pytest.raises(ValueError, match="recover"):
+        SVFusionEngine(None, cfg3)
+
+
+def test_degraded_read_only_on_wal_failure(tmp_path):
+    from repro.core.engine import ReadOnlyEngineError
+    eng, cfg, data = _engine(tmp_path)
+    eng.insert(data[256:288])
+    eng._wal._f.close()                            # WAL device dies
+    with pytest.raises(ReadOnlyEngineError):
+        eng.insert(data[288:320])
+    st = eng.stats()
+    assert st["degraded"]
+    # the failed op was NOT applied (WAL-before-write)
+    assert int(eng._backend.n) == 288
+    # reads keep working
+    ids, _ = eng.search(data[:4])
+    assert np.asarray(ids).shape[0] == 4
+    with pytest.raises(ReadOnlyEngineError):
+        eng.delete(np.arange(4))
+    eng.close()                                    # must not raise
+
+
+def test_checkpoint_rotates_segment(tmp_path):
+    eng, cfg, data = _engine(tmp_path)
+    store = tmp_path / "store"
+    eng.insert(data[256:288])
+    assert eng.stats()["wal_records"] == 1
+    epoch = eng.checkpoint()
+    assert epoch == 1
+    man = walmod.load_manifest(str(store))
+    assert man["epoch"] == 1 and man["op_seq"] == 1
+    # rotation continues the op_seq numbering and prunes stale epochs
+    eng.insert(data[288:320])
+    assert eng.stats()["wal_last_seq"] == 2
+    names = set(os.listdir(store))
+    assert "wal-00000001.log" in names and "wal-00000000.log" not in names
+    assert "snapshot-00000000.npz" not in names
+    eng.close()
+
+
+def test_disk_flush_fsyncs_backing_files(tmp_path, monkeypatch):
+    eng, cfg, data = _engine(tmp_path)
+    calls = []
+    real = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (calls.append(fd),
+                                                 real(fd))[1])
+    eng._backend.store.disk.flush()
+    assert len(calls) >= 2                         # vectors.npy + nbrs.npy
+    monkeypatch.undo()
+    eng.close()
+
+
+def test_prefetcher_stop_is_terminal(tmp_path):
+    eng, cfg, data = _engine(tmp_path, prefetch=True)
+    store = eng._backend.store
+    assert store._th is not None
+    store.stop()
+    assert store._th is None
+    store.prefetch(np.arange(8))                   # no-op, no crash
+    store.start_prefetcher()                       # refuses to restart
+    assert store._th is None
+    eng.close()                                    # second stop() is fine
+
+
+# ---------------------------------------------------------------------------
+# Subprocess crash matrix: kill -9 -> reopen -> bit-parity vs clean run
+# ---------------------------------------------------------------------------
+
+TIER1_COMBOS = [
+    ("insert_heavy", "post_wal_append", 4),
+    ("insert_heavy", "mid_memmap_write", 1),
+    ("insert_heavy", "pre_manifest_rename", 3),    # crash inside checkpoint
+    ("delete_heavy", "post_wal_append", 5),
+    ("consolidation", "mid_consolidation_merge", 3),
+]
+
+FULL_COMBOS = [
+    ("insert_heavy", "post_wal_append", 0),
+    ("insert_heavy", "post_wal_append", 6),
+    ("insert_heavy", "mid_memmap_write", 4),
+    ("insert_heavy", "mid_memmap_write", 6),
+    ("delete_heavy", "post_wal_append", 1),
+    ("delete_heavy", "post_wal_append", 6),
+    ("delete_heavy", "mid_memmap_write", 2),
+    ("delete_heavy", "pre_manifest_rename", 4),
+    ("consolidation", "post_wal_append", 3),
+    ("consolidation", "mid_memmap_write", 4),
+    ("insert_heavy_pq", "post_wal_append", 4),
+    ("insert_heavy_pq", "mid_memmap_write", 1),
+    ("insert_heavy_pq", "pre_manifest_rename", 3),
+    ("consolidation_pq", "mid_consolidation_merge", 3),
+    ("consolidation_pq", "post_wal_append", 1),
+]
+
+_CLEAN_DIGESTS = {}
+
+
+def _run_driver(args, timeout=300):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, DRIVER] + [str(a) for a in args],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def _clean_digest(tmp_path_factory, workload, records):
+    """Uninterrupted-run digests depend only on (workload, record-prefix
+    length) — memoized so the matrix doesn't rebuild identical baselines."""
+    key = (workload, records)
+    if key not in _CLEAN_DIGESTS:
+        d = tmp_path_factory.mktemp(f"clean-{workload}-{records}")
+        out = d / "digest.npz"
+        r = _run_driver([workload, "clean", "--dir", d / "store",
+                         "--out", out, "--records", records])
+        assert r.returncode == 0, f"clean driver failed:\n{r.stderr}"
+        _CLEAN_DIGESTS[key] = str(out)
+    return np.load(_CLEAN_DIGESTS[key])
+
+
+def _crash_reopen_parity(tmp_path, tmp_path_factory, workload, point, op):
+    ops = faultinject.WORKLOADS[workload]
+    store = tmp_path / "store"
+
+    r = _run_driver([workload, "crash", "--dir", store,
+                     "--crash-point", point, "--crash-op", op])
+    assert r.returncode == faultinject.CRASH_EXIT, \
+        f"expected kill at {point}, got rc={r.returncode}:\n{r.stderr}"
+
+    out = tmp_path / "reopen.npz"
+    r = _run_driver([workload, "reopen", "--dir", store, "--out", out])
+    assert r.returncode == 0, f"recovery failed:\n{r.stderr}"
+    dig = np.load(out)
+
+    k = int(dig["last_seq"])
+    assert k == faultinject.expected_records(ops, point, op)
+
+    clean = _clean_digest(tmp_path_factory, workload, k)
+    assert set(dig.files) == set(clean.files)
+    for key in clean.files:
+        assert np.array_equal(dig[key], clean[key]), \
+            f"{key} diverged after {point}@op{op} ({workload})"
+
+
+@pytest.mark.parametrize("workload,point,op", TIER1_COMBOS)
+def test_crash_recovery_parity(tmp_path, tmp_path_factory,
+                               workload, point, op):
+    _crash_reopen_parity(tmp_path, tmp_path_factory, workload, point, op)
+
+
+@pytest.mark.skipif(not os.environ.get("SVF_DURABILITY_FULL"),
+                    reason="full crash matrix: set SVF_DURABILITY_FULL=1 "
+                           "(make verify-durability)")
+@pytest.mark.parametrize("workload,point,op", FULL_COMBOS)
+def test_crash_recovery_parity_full(tmp_path, tmp_path_factory,
+                                    workload, point, op):
+    _crash_reopen_parity(tmp_path, tmp_path_factory, workload, point, op)
