@@ -8,6 +8,12 @@
 #                      against its own config-key history
 #   make bench-scale — >=10x memmap-built scale-up preset (PQ code lane,
 #                      per-tier byte footprints; minutes-scale, not CI)
+#   make bench-slo-smoke — open-loop hot-tenant overload storm (CI gate:
+#                      shed+deadline-miss fraction < 5%, every tenant's
+#                      p99 under the derived SLO target, degradation
+#                      engages before any shedding, cold tenants lose
+#                      nothing)
+#   make bench-slo   — the full (longer) SLO storm sweep
 #   make verify-durability — the FULL kill -9 crash matrix (every crash
 #                      point x workload incl. PQ variants) + all
 #                      durability unit tests; tier-1 runs only a slice
@@ -15,7 +21,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: verify test verify-durability bench-disk bench-smoke bench-scale
+.PHONY: verify test verify-durability bench-disk bench-smoke bench-scale \
+        bench-slo bench-slo-smoke
 
 verify:
 	$(PY) -m pytest -x -q
@@ -34,3 +41,9 @@ bench-smoke:
 
 bench-scale:
 	PYTHONPATH=src:. $(PY) benchmarks/bench_disk.py --scale --gate
+
+bench-slo-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/bench_slo.py --smoke --gate
+
+bench-slo:
+	PYTHONPATH=src:. $(PY) benchmarks/bench_slo.py --gate

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as Cache
-from repro.core import mvcc, update
+from repro.core import mvcc, slo, update
 from repro.core import wal as walmod
 from repro.core.build import build_index
 from repro.core.search import search_batch
@@ -76,6 +76,35 @@ class EngineConfig:
     coalesce: bool = True                # adaptive cross-query micro-batching
     coalesce_max_batch: int = 256        # max queries per merged dispatch
     coalesce_window: float = 2e-3        # max adaptive coalescing wait (s)
+    # -- SLO-aware serving tier (core/slo.py): per-tenant deadline
+    #    admission, p99-targeted coalescing, graceful degradation --
+    slo_target_p99: float = 0.0          # per-request p99 target (s): the
+    #                                      window controller widens only
+    #                                      under it, pressure/shedding are
+    #                                      scaled by it. 0 (default) keeps
+    #                                      the tier passive: weighted-fair
+    #                                      admission + explicit deadlines
+    #                                      only, no degradation/shedding,
+    #                                      merge-rate window heuristic
+    slo_default_deadline: float = 0.0    # deadline (s after submit) for
+    #                                      requests that carry none;
+    #                                      0 = no implicit deadline
+    slo_tenant_weights: Optional[dict] = None  # tenant -> fair-share
+    #                                      weight (weighted-fair drain;
+    #                                      unlisted tenants weigh 1.0) —
+    #                                      weights double as priorities
+    slo_degrade_order: tuple = ("rerank_depth", "beam", "fused_rounds")
+    #                                      quality knobs halved (in order,
+    #                                      cumulatively) as overload
+    #                                      pressure rises; shedding is
+    #                                      allowed only past the last
+    slo_degrade_at: float = 0.5          # pressure (modeled queue wait /
+    #                                      target p99) engaging level 1
+    slo_shed_at: float = 1.0             # modeled-wait/target above which
+    #                                      a maxed-degradation tenant is
+    #                                      shed at admission
+    slo_restore_after: int = 4           # calm dispatches per one-level
+    #                                      degradation restore
     wavp_cascade_promote: bool = True    # cascade hits displace frozen slots
     # -- PQ code lane (quant.py): device-resident ADC scan + exact re-rank
     pq_enabled: bool = False             # coarse-then-refine tiered search
@@ -130,12 +159,15 @@ class ReadOnlyEngineError(RuntimeError):
 
 
 class _SearchFuture:
-    """Demux handle for one coalesced search request."""
+    """Demux handle for one coalesced search request. Carries the SLO
+    admission metadata: ``tenant`` names the per-tenant queue it joins
+    and ``deadline`` (absolute ``perf_counter`` time, or None) lets the
+    dispatcher skip-and-fail it once unmeetable."""
 
     __slots__ = ("queries", "submitted", "_event", "ids", "dists", "error",
-                 "latency")
+                 "latency", "tenant", "deadline")
 
-    def __init__(self, queries):
+    def __init__(self, queries, tenant=None, deadline=None):
         self.queries = queries
         self.submitted = time.perf_counter()
         self._event = threading.Event()
@@ -143,6 +175,10 @@ class _SearchFuture:
         self.dists = None
         self.error = None
         self.latency = 0.0
+        self.tenant = slo.DEFAULT_TENANT if tenant is None else str(tenant)
+        # relative seconds -> absolute deadline on the submit clock
+        self.deadline = None if deadline is None \
+            else self.submitted + float(deadline)
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -156,25 +192,34 @@ class _SearchFuture:
 
 
 class CoalescingScheduler:
-    """Adaptive cross-query coalescing (paper §4.4, adaptive resource
-    management): requests arriving within a short window — or until the
-    micro-batch fills — are stacked into ONE executor invocation and the
-    results are demultiplexed per request, so N concurrent submitters
-    share each round's fixed dispatch cost instead of paying it N times.
-    The window adapts to load: it halves whenever a dispatch went out
-    uncoalesced (light load — a lone caller converges to ~direct-call
-    p50) and doubles whenever requests actually merged (heavy load —
-    deeper micro-batches amortize further), clamped to
-    [min_window, max_window]."""
+    """SLO-aware adaptive cross-query coalescing (paper §4.4, adaptive
+    resource management): requests arriving within a short window — or
+    until the micro-batch fills — are stacked into ONE executor
+    invocation and the results are demultiplexed per request, so N
+    concurrent submitters share each round's fixed dispatch cost instead
+    of paying it N times.
+
+    Admission runs through the serving tier (``core.slo.ServingTier``):
+    per-tenant queues drained weighted-fair, deadline-unmeetable
+    requests skipped-and-failed, and — once degradation is maxed —
+    over-SLO tenants shed at admission. The coalescing window is
+    **p99-targeted**: a reservoir of per-request end-to-end latencies is
+    kept, and the window widens only while the observed p99 is under the
+    policy target AND requests actually merged; it halves when a
+    dispatch went out uncoalesced (light load — a lone caller converges
+    to ~direct-call p50) or when p99 overshoots the target (queueing is
+    eating the budget), clamped to [min_window, max_window]. Under
+    pressure the tier degrades search quality (``slo.degrade_params``
+    applied by the search_fn via ``degrade=level``) before any request
+    is shed."""
 
     def __init__(self, search_fn, *, max_batch=256, max_window=2e-3,
-                 min_window=5e-5):
+                 min_window=5e-5, policy: Optional[slo.SLOPolicy] = None):
         self._search = search_fn
-        self._q: queue.Queue = queue.Queue()
+        self.tier = slo.ServingTier(policy)
         self._stop = threading.Event()
-        self._closed = False
-        self._lock = threading.Lock()
         self._th: Optional[threading.Thread] = None
+        self._th_lock = threading.Lock()
         self.max_batch = max_batch
         self.max_window = max_window
         self.min_window = min_window
@@ -183,27 +228,31 @@ class CoalescingScheduler:
         self.queries = 0       # query rows served
         self.dispatches = 0    # merged executor invocations
         self.coalesced = 0     # dispatches that merged > 1 request
+        self.degraded_dispatches = 0  # dispatches run at level > 0
 
     # -- client side ----------------------------------------------------
-    def submit(self, queries) -> _SearchFuture:
-        fut = _SearchFuture(np.asarray(queries, np.float32))
+    def submit(self, queries, tenant=None, deadline=None) -> _SearchFuture:
+        """Enqueue one request. ``tenant`` keys the fair-share admission
+        queue (None -> default tenant); ``deadline`` is seconds from now
+        after which the result is worthless (None -> policy default).
+        A shed request comes back as a future already failed with
+        ``slo.LoadShedError``."""
+        fut = _SearchFuture(np.asarray(queries, np.float32),
+                            tenant=tenant, deadline=deadline)
         self._ensure_started()
-        with self._lock:   # closed-check + enqueue atomic vs stop()'s drain
-            if self._closed:
-                raise RuntimeError("CoalescingScheduler is stopped (engine "
-                                   "closed); no further searches accepted")
-            self._q.put(fut)
+        self.tier.offer(fut)   # raises after stop(); sheds via the future
         return fut
 
-    def search(self, queries):
-        return self.submit(queries).result()
+    def search(self, queries, tenant=None, deadline=None):
+        return self.submit(queries, tenant=tenant,
+                           deadline=deadline).result()
 
     # -- dispatcher -----------------------------------------------------
     def _ensure_started(self):
         if self._th is not None and self._th.is_alive():
             return
-        with self._lock:
-            if self._closed:
+        with self._th_lock:
+            if self.tier.closed:
                 return
             if self._th is None or not self._th.is_alive():
                 self._th = threading.Thread(target=self._run, daemon=True)
@@ -211,31 +260,19 @@ class CoalescingScheduler:
 
     def _run(self):
         while not self._stop.is_set():
-            try:
-                first = self._q.get(timeout=0.05)
-            except queue.Empty:
+            batch = self.tier.collect(self.max_batch, self.window,
+                                      self._stop)
+            if not batch:
                 continue
-            batch = [first]
-            rows = len(first.queries)
-            deadline = time.perf_counter() + self.window
-            while rows < self.max_batch:
-                left = deadline - time.perf_counter()
-                if left <= 0:
-                    break
-                try:
-                    nxt = self._q.get(timeout=left)
-                except queue.Empty:
-                    break
-                batch.append(nxt)
-                rows += len(nxt.queries)
-            if len(batch) == 1:
-                self.window = max(self.min_window, self.window * 0.5)
-            else:
-                self.window = min(self.max_window, self.window * 2.0)
-                self.coalesced += 1
+            rows = sum(len(f.queries) for f in batch)
+            level = self.tier.level
+            ok = True
+            t0 = time.perf_counter()
             try:
+                kw = {"degrade": level} if level > 0 else {}
                 ids, dists = self._search(
-                    np.concatenate([f.queries for f in batch], axis=0))
+                    np.concatenate([f.queries for f in batch], axis=0),
+                    **kw)
                 off = 0
                 now = time.perf_counter()
                 for f in batch:
@@ -244,33 +281,66 @@ class CoalescingScheduler:
                     f.latency = now - f.submitted
                     off += b
             except Exception as e:
+                ok = False
                 for f in batch:
                     f.error = e
             finally:
+                dt = time.perf_counter() - t0
                 self.requests += len(batch)
                 self.queries += rows
                 self.dispatches += 1
+                if level > 0:
+                    self.degraded_dispatches += 1
+                if len(batch) > 1:
+                    self.coalesced += 1
+                self.tier.complete(batch, rows, dt, ok=ok)
                 for f in batch:
                     f._event.set()
+                self._adapt_window(len(batch))
 
-    def stop(self):
+    def _adapt_window(self, merged: int):
+        """p99-targeted window control. Shrink on an uncoalesced dispatch
+        (idle convergence to the direct-call path) or when request p99
+        overshoots the target (wider windows add queueing latency we can
+        no longer afford); widen ONLY while merging is happening and p99
+        still has headroom under the target."""
+        if merged == 1:
+            self.window = max(self.min_window, self.window * 0.5)
+            return
+        target = self.tier.policy.target_p99
+        p99 = self.tier.lat.quantile(99)   # dispatcher-only read
+        if target > 0 and p99 is not None and p99 > target:
+            self.window = max(self.min_window, self.window * 0.5)
+        else:
+            # no target configured -> legacy merge-rate heuristic
+            # (merging happened, widen); under a target, widen only
+            # while p99 has headroom
+            self.window = min(self.max_window, self.window * 2.0)
+
+    def stop(self, join_timeout: float = 5.0):
         """Terminal shutdown: stop the dispatcher and FAIL any request
         still queued — an orphaned future would otherwise hang its caller
-        forever in ``result()``. Submissions after stop() raise."""
-        with self._lock:
-            self._closed = True
+        forever in ``result()``. Submissions after stop() raise. The
+        drain shares the tier's lock with the dispatcher's queue pops
+        (which refuse once ``closed`` is set), so a slow-to-exit
+        dispatcher and the drain can never complete the same future
+        twice; a dispatcher that outlives ``join_timeout`` (an executor
+        call that never returns) raises AFTER the queued futures are
+        failed, so no caller is left hanging either way."""
+        self.tier.close()
         self._stop.set()
-        if self._th is not None:
-            self._th.join(timeout=2.0)
-            self._th = None
-        while True:
-            try:
-                fut = self._q.get_nowait()
-            except queue.Empty:
-                break
-            fut.error = RuntimeError("CoalescingScheduler stopped before "
-                                     "this request was dispatched")
-            fut._event.set()
+        th = self._th
+        if th is not None:
+            th.join(timeout=join_timeout)
+        self.tier.drain(RuntimeError(
+            "CoalescingScheduler stopped before this request was "
+            "dispatched"))
+        if th is not None and th.is_alive():
+            raise RuntimeError(
+                "CoalescingScheduler dispatcher did not exit within "
+                f"{join_timeout}s of stop(): the executor call is stuck; "
+                "its in-flight futures may never complete")
+        self._th = None
 
 
 class SVFusionEngine:
@@ -347,7 +417,16 @@ class SVFusionEngine:
         self._topo_misses = 0
         self._coalescer = (CoalescingScheduler(
             self._search_exec, max_batch=cfg.coalesce_max_batch,
-            max_window=cfg.coalesce_window) if cfg.coalesce else None)
+            max_window=cfg.coalesce_window,
+            policy=slo.SLOPolicy(
+                target_p99=cfg.slo_target_p99,
+                default_deadline=cfg.slo_default_deadline,
+                tenant_weights=cfg.slo_tenant_weights,
+                degrade_order=tuple(cfg.slo_degrade_order),
+                degrade_at=cfg.slo_degrade_at,
+                shed_at=cfg.slo_shed_at,
+                restore_after=cfg.slo_restore_after))
+            if cfg.coalesce else None)
         self._bg_threads: list = []
         self.latencies: dict[str, list] = {"search": [], "insert": [],
                                            "delete": []}
@@ -490,25 +569,34 @@ class SVFusionEngine:
             self._state = state
 
     # ------------------------------------------------------------------
-    def search(self, queries, update_cache=True):
+    def search(self, queries, update_cache=True, tenant=None,
+               deadline=None):
         """Batched search. Returns (ids, dists) as numpy. With coalescing
         enabled (default) the request joins the engine's adaptive
-        cross-query micro-batch: concurrent callers are stacked into ONE
-        executor invocation and demultiplexed, and the window shrinks
-        itself under light load so a lone caller pays ~the direct-call
-        latency (paper §4.4 adaptive resource management)."""
+        cross-query micro-batch through the SLO serving tier: concurrent
+        callers are stacked into ONE executor invocation and
+        demultiplexed, the window shrinks itself under light load so a
+        lone caller pays ~the direct-call latency, and under overload
+        search quality degrades (then, last, the over-SLO tenant sheds)
+        rather than tail latency growing unboundedly (paper §4.4
+        adaptive resource management). ``tenant`` keys the weighted-fair
+        admission queue; ``deadline`` (seconds from now) lets the
+        dispatcher skip the request once unmeetable — both failure modes
+        raise (``slo.LoadShedError`` / ``slo.DeadlineMissError``)."""
         queries = np.asarray(queries, np.float32)
         if self._coalescer is not None and update_cache and len(queries):
-            return self._coalescer.search(queries)
+            return self._coalescer.search(queries, tenant=tenant,
+                                          deadline=deadline)
         return self._search_exec(queries, update_cache)
 
-    def submit_search(self, queries):
+    def submit_search(self, queries, tenant=None, deadline=None):
         """Async entry to the coalescing scheduler: returns a future-like
         handle (``.result() -> (ids, dists)``, ``.latency``). Concurrent
-        submitters share executor dispatches."""
+        submitters share executor dispatches; ``tenant``/``deadline``
+        as in ``search``."""
         queries = np.asarray(queries, np.float32)
         if self._coalescer is None:
-            fut = _SearchFuture(queries)
+            fut = _SearchFuture(queries, tenant=tenant, deadline=deadline)
             try:
                 fut.ids, fut.dists = self._search_exec(queries)
                 fut.latency = time.perf_counter() - fut.submitted
@@ -516,13 +604,28 @@ class SVFusionEngine:
                 fut.error = e
             fut._event.set()
             return fut
-        return self._coalescer.submit(queries)
+        return self._coalescer.submit(queries, tenant=tenant,
+                                      deadline=deadline)
 
-    def _search_exec(self, queries, update_cache=True):
-        """One executor invocation (the coalescer's dispatch target)."""
+    def _degraded_knobs(self, degrade: int):
+        """SearchParams + rerank depth at degradation ``degrade`` (the
+        serving tier's pressure level): level 0 is the configured
+        quality; deeper levels shrink knobs per ``slo_degrade_order``.
+        The level count is bounded by the order's length, so at most
+        len(order) extra executor shapes ever compile."""
+        return slo.degrade_params(self.cfg.search, self.cfg.rerank_depth,
+                                  degrade,
+                                  tuple(self.cfg.slo_degrade_order))
+
+    def _search_exec(self, queries, update_cache=True, degrade=0):
+        """One executor invocation (the coalescer's dispatch target).
+        ``degrade`` > 0 dispatches at reduced search quality (graceful
+        degradation under overload — see ``core.slo``)."""
         if self._backend is not None:
-            return self._search_tiered(queries, update_cache)
+            return self._search_tiered(queries, update_cache,
+                                       degrade=degrade)
         t0 = time.perf_counter()
+        sp, _ = self._degraded_knobs(degrade)
         st = self._read_state()
         queries = jnp.asarray(queries, jnp.float32)
         B = queries.shape[0]
@@ -530,7 +633,7 @@ class SVFusionEngine:
         if Bp != B:
             queries = jnp.concatenate(
                 [queries, jnp.zeros((Bp - B, queries.shape[1]), queries.dtype)])
-        res = search_batch(st, queries, self._next_key(), self.cfg.search)
+        res = search_batch(st, queries, self._next_key(), sp)
         if Bp != B:
             lane = jnp.arange(Bp)[:, None] < B   # mask pad lanes out of logs
             res = res._replace(ids=res.ids[:B], dists=res.dists[:B],
@@ -549,16 +652,19 @@ class SVFusionEngine:
         self.latencies["search"].append(time.perf_counter() - t0)
         return ids, np.asarray(res.dists)
 
-    def _search_tiered(self, queries, update_cache=True):
+    def _search_tiered(self, queries, update_cache=True, degrade=0):
         """Three-tier search: speculative pipeline + cascading lookup +
         post-batch host placement. Batches are padded to power-of-two
         buckets so the coalescer's variable micro-batch sizes compile
-        O(log) dispatch specializations, not one per size."""
+        O(log) dispatch specializations, not one per size. ``degrade``
+        dispatches with the serving tier's reduced-quality knobs (beam /
+        hop budget / re-rank depth per ``slo_degrade_order``)."""
         from repro.core.search import search_tiered
         t0 = time.perf_counter()
         with self._cache_lock:
             seed = int(self._rng.integers(0, 2 ** 31 - 1))
         backend = self._backend
+        sp, rerank_depth = self._degraded_knobs(degrade)
         queries = np.asarray(queries, np.float32)
         B = queries.shape[0]
         Bp = 1 << max(0, (B - 1)).bit_length()
@@ -567,14 +673,14 @@ class SVFusionEngine:
                 [queries, np.zeros((Bp - B, queries.shape[1]), np.float32)])
         f_lam = self._placement.scores(backend.e_in)   # one O(N) pass/batch
         res = search_tiered(
-            self._backend, self._placement, queries, seed, self.cfg.search,
+            self._backend, self._placement, queries, seed, sp,
             f_lam=f_lam,
             prefetch_budget=(self.cfg.prefetch_budget if self.cfg.prefetch
                              else 0),
             speculate=self.cfg.speculate, spec_width=self.cfg.spec_width,
             spec_rank=self._spec_rank,
             pq=(backend.pq if self.cfg.pq_enabled else None),
-            rerank_depth=self.cfg.rerank_depth,
+            rerank_depth=rerank_depth,
             topo=(backend.topo if self.cfg.pq_enabled else None),
             fused_rounds=self.cfg.fused_rounds)
         if Bp != B:   # drop pad lanes from results AND placement logs
@@ -969,6 +1075,12 @@ class SVFusionEngine:
             d["coalesce_dispatches"] = c.dispatches
             d["coalesce_batch_mean"] = c.queries / max(c.dispatches, 1)
             d["coalesce_window_us"] = c.window * 1e6
+            d["coalesce_overshoot_avoided"] = c.tier.overshoot_avoided
+            d["degraded_dispatches"] = c.degraded_dispatches
+            # SLO serving tier observability: per-tenant p50/p99 (ms),
+            # queue depths, shed / deadline-miss counters, pressure and
+            # the current degradation level (core/slo.py)
+            d["slo"] = c.tier.stats()
         # modeled per-access time on v5e (DESIGN.md §2): this machine has
         # one physical tier, so tier economics are reported via the
         # calibrated cost model applied to observed hit/miss/transfer counts
@@ -1025,6 +1137,10 @@ class MultiStreamRunner:
         self._threads = []
         self.results: list = []
         self.errors: list = []
+        # requests intentionally rejected by the SLO tier (shed /
+        # deadline-missed) land here, not in ``errors``: they are the
+        # admission policy working as designed, not worker failures
+        self.shed: list = []
 
     def start(self):
         self._threads = [threading.Thread(target=self._update_worker,
@@ -1035,8 +1151,13 @@ class MultiStreamRunner:
         for t in self._threads:
             t.start()
 
-    def submit_search(self, queries, tag=None):
-        self._sq.put((np.asarray(queries, np.float32), tag, time.perf_counter()))
+    def submit_search(self, queries, tag=None, deadline=None):
+        """``tag`` doubles as the request's tenant id in the engine's
+        SLO admission tier (None -> default tenant); ``deadline`` is
+        seconds from dispatch-by-the-worker after which the answer is
+        worthless (skip-and-fail admission)."""
+        self._sq.put((np.asarray(queries, np.float32), tag, deadline,
+                      time.perf_counter()))
 
     def submit_insert(self, vectors):
         self._q.put(("insert", np.asarray(vectors, np.float32)))
@@ -1047,14 +1168,17 @@ class MultiStreamRunner:
     def _search_worker(self):
         while not self._stop.is_set():
             try:
-                qarr, tag, t0 = self._sq.get(timeout=0.05)
+                qarr, tag, deadline, t0 = self._sq.get(timeout=0.05)
             except queue.Empty:
                 continue
             try:
                 # one in-flight request per stream; the engine's coalescer
                 # merges across streams (and any direct submitters)
-                ids, _ = self.engine.search(qarr)
+                ids, _ = self.engine.search(qarr, tenant=tag,
+                                            deadline=deadline)
                 self.results.append((tag, ids, time.perf_counter() - t0))
+            except slo.SLOError as e:
+                self.shed.append((tag, e))
             except Exception as e:  # pragma: no cover
                 self.errors.append(e)
 

@@ -864,6 +864,15 @@ def _pow2_bucket(u: int, floor: int = 512) -> int:
     return b
 
 
+def effective_rerank_depth(rerank_depth: int, k: int, pool: int) -> int:
+    """Resolve the ``rerank_depth`` knob to the concrete pool prefix the
+    exact re-rank stage pulls vectors for: ``<= 0`` is the whole-pool
+    sentinel, anything else clamps to ``[k, pool]``. The SLO degradation
+    ladder (core/slo.py) halves through this same resolution so a
+    degraded depth and the executor agree on sentinel semantics."""
+    return pool if rerank_depth <= 0 else max(k, min(rerank_depth, pool))
+
+
 def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                   *, f_lam=None, prefetch_budget: int = 0,
                   entry_ids=None, speculate: bool = True,
@@ -953,7 +962,7 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
         # scored from its still-zero code row.
         codes_epoch = store.write_epoch
         codes_j = pq.synced_codes()
-        depth = L if rerank_depth <= 0 else max(k, min(rerank_depth, L))
+        depth = effective_rerank_depth(rerank_depth, k, L)
 
     spec = None
     if speculate:

@@ -82,6 +82,21 @@ class ServeEngine:
             self.lane_len[s] = 0
             self.tokens[s, 0] = req._feed.pop(0)
 
+    def _observe_tick(self, dt) -> bool:
+        """Classify a tick duration against the EWMA and fold it in.
+
+        The straggler comparison uses the EWMA *before* this tick, and a
+        flagged tick never updates the EWMA: a straggler folded into its
+        own threshold inflates it, making the next straggler invisible
+        (two back-to-back slow ticks would count as one).
+        """
+        ewma = self.tick_ewma
+        if ewma is not None and dt > self.straggler_factor * ewma:
+            self.stragglers += 1
+            return True
+        self.tick_ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+        return False
+
     def tick(self):
         """One decode step for the whole slot pool. Returns #active."""
         self._admit()
@@ -98,12 +113,9 @@ class ServeEngine:
                                  self.lane_len)
         logits = np.asarray(logits[:, 0])
         dt = time.perf_counter() - t0
-        ewma = self.tick_ewma
-        self.tick_ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
 
         # straggler check (pod-level analogue: re-dispatch to replica)
-        if ewma is not None and dt > self.straggler_factor * ewma:
-            self.stragglers += 1
+        if self._observe_tick(dt):
             for s, req in enumerate(self.active):
                 if req is not None and req.retries < self.max_retries:
                     req.retries += 1
