@@ -14,6 +14,11 @@
 #                      engages before any shedding, cold tenants lose
 #                      nothing)
 #   make bench-slo   — the full (longer) SLO storm sweep
+#   make bench-filtered-smoke — filtered-search selectivity sweep (CI
+#                      gate: selectivity router picks fallback below /
+#                      graph lane above the threshold, recall@10 >= 0.9
+#                      at 10% selectivity, filtered QPS >= 0.5x
+#                      unfiltered at the 10% tag point)
 #   make verify-durability — the FULL kill -9 crash matrix (every crash
 #                      point x workload incl. PQ variants) + all
 #                      durability unit tests; tier-1 runs only a slice
@@ -22,7 +27,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: verify test verify-durability bench-disk bench-smoke bench-scale \
-        bench-slo bench-slo-smoke
+        bench-slo bench-slo-smoke bench-filtered-smoke
 
 verify:
 	$(PY) -m pytest -x -q
@@ -47,3 +52,6 @@ bench-slo-smoke:
 
 bench-slo:
 	PYTHONPATH=src:. $(PY) benchmarks/bench_slo.py --gate
+
+bench-filtered-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/bench_filtered.py --gate

@@ -66,11 +66,17 @@ def config_key(meta: dict) -> str:
     scale run against the toy sample). Entries written before this key
     existed lack the pq/scale fields; the defaults make their computed
     key equal to a fresh exact-mode run of the same shape, so history
-    stays comparable across the cutover."""
-    return ("smoke{}-n{}-d{}-w{}-pq{}-scale{}".format(
+    stays comparable across the cutover. The same convention covers the
+    filtered-search fields (``filter``/``filter_sel``, bench_filtered.py):
+    legacy entries lack them and default to the unfiltered key."""
+    key = ("smoke{}-n{}-d{}-w{}-pq{}-scale{}".format(
         int(bool(meta.get("smoke"))), meta.get("n"), meta.get("dim"),
         meta.get("window_frac", 4), int(bool(meta.get("pq"))),
         int(bool(meta.get("scale")))))
+    if meta.get("filter"):
+        key += "-filt{}-sel{}".format(meta["filter"],
+                                      meta.get("filter_sel"))
+    return key
 
 
 def _append_result(entry: dict, path=None, keep_per_key: int = 10):
@@ -134,8 +140,14 @@ def qps_floor(meta: dict, qps_tolerance=0.2, path=None):
         return None
     key = config_key(meta)
     for e in reversed(hist):
-        if config_key(e.get("meta", {})) == key and "tiered_serving" in e:
-            return (1.0 - qps_tolerance) * e["tiered_serving"]["search_qps"]
+        # skip malformed / pre-cutover entries (missing sections or the
+        # fields the comparison needs) instead of KeyError-ing on them
+        try:
+            if config_key(e.get("meta", {})) == key:
+                return (1.0 - qps_tolerance) \
+                    * e["tiered_serving"]["search_qps"]
+        except (KeyError, TypeError):
+            continue
     return None
 
 
@@ -160,7 +172,17 @@ def check_gate(path=None, qps_tolerance=0.2, recall_tolerance=0.02):
     key = config_key(new.get("meta", {}))
     prev = None
     for e in reversed(hist[:-1]):
-        if config_key(e.get("meta", {})) == key and "tiered_serving" in e:
+        # an entry only qualifies as the baseline when it carries every
+        # field the comparison reads — legacy/malformed entries (e.g.
+        # written before the filtered-search fields existed) are skipped,
+        # never KeyError-ed on
+        try:
+            ok = (config_key(e.get("meta", {})) == key
+                  and "search_qps" in e["tiered_serving"]
+                  and "recall" in e["tiered_serving"])
+        except (KeyError, TypeError):
+            ok = False
+        if ok:
             prev = e
             break
     if prev is None:

@@ -1,0 +1,184 @@
+"""Filtered-search recall/QPS sweep over predicate selectivity.
+
+Serves the PQ-on smoke config through ``engine.search(filter=...)``
+across numeric-range selectivities {0.1%, 1%, 10%, 50%} plus a 10% tag
+filter, measuring per-point recall@10 against an exact host-side
+post-filtered scan, QPS, and the selectivity router's chosen path
+(graph lane vs brute-force fallback), alongside an unfiltered baseline.
+``filter_fallback_selectivity`` is pinned at 0.15 so the sub-15% points
+exercise the fallback (one ADC scan over the matching id set + exact
+re-rank) and the 50% point exercises the predicate-composited graph
+lane — the two lanes of the tentpole, both on the gate.
+
+Every run appends a machine-readable entry to
+``results/pod256/bench_filtered.json`` (same rotation/ key machinery as
+bench_disk.py; filter fields ride the config key so sweep history only
+gates against itself). ``--gate`` additionally enforces the acceptance
+bars: recall@10 >= 0.9 at 10% selectivity, fallback engaged below the
+threshold, graph lane at 50%, and filtered QPS at the 10% tag point
+>= 0.5x the unfiltered baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_disk import RESULTS_DIR, _append_result, config_key
+from repro.core.engine import EngineConfig, SVFusionEngine
+from repro.core.filters import FilterSpec, AttributeSchema
+from repro.core.types import SearchParams
+
+FALLBACK_THRESHOLD = 0.15
+RANGE_POINTS = (0.001, 0.01, 0.1, 0.5)     # score in [0, s) -> selectivity s
+TAG_DOMAIN = 10                            # cat = i % 10 -> 10% per tag
+
+
+def _exact_filtered_topk(vecs, queries, mask, k):
+    """Ground truth: exact top-k over the ids passing ``mask``."""
+    idx = np.where(mask)[0]
+    out = np.full((len(queries), k), -1, np.int64)
+    if not idx.size:
+        return out
+    d = ((vecs[idx][None] - queries[:, None]) ** 2).sum(-1)
+    order = np.argsort(d, axis=1)[:, :k]
+    top = idx[order]
+    out[:, :top.shape[1]] = top
+    return out
+
+
+def _recall(found, truth):
+    """recall@k against a truth set that may hold fewer than k ids."""
+    per_q = []
+    for f, t in zip(found, truth):
+        ts = set(int(i) for i in t if i >= 0)
+        if not ts:
+            continue
+        fs = set(int(i) for i in f if i >= 0)
+        per_q.append(len(fs & ts) / len(ts))
+    return float(np.mean(per_q)) if per_q else 1.0
+
+
+def _timed_qps(eng, queries, spec, *, warmup=2, batches=8):
+    for _ in range(warmup):
+        eng.search(queries, filter=spec, update_cache=False)
+    t0 = time.perf_counter()
+    for _ in range(batches):
+        eng.search(queries, filter=spec, update_cache=False)
+    return batches * len(queries) / max(time.perf_counter() - t0, 1e-9)
+
+
+def main(n=1200, dim=16, seed=0, *, smoke=True, gate=False,
+         query_batch=32):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    queries = rng.normal(size=(query_batch, dim)).astype(np.float32)
+    scores = (np.arange(n) / n).astype(np.float32)
+    cats = np.arange(n) % TAG_DOMAIN
+    schema = AttributeSchema(tag_fields=("cat",), num_fields=("score",),
+                             tag_domain=TAG_DOMAIN)
+    sp = SearchParams(k=10, pool=64, max_iters=96)
+    meta = {"n": n, "dim": dim, "seed": seed, "smoke": smoke, "pq": True,
+            "scale": False, "window_frac": 4, "filter": "sweep",
+            "filter_sel": "0.001-0.5",
+            "fallback_threshold": FALLBACK_THRESHOLD}
+
+    cases = [("range", s, FilterSpec(ranges={"score": (None, s)}),
+              scores < s) for s in RANGE_POINTS]
+    cases.append(("tag", 1.0 / TAG_DOMAIN, FilterSpec(tags={"cat": {0}}),
+                  cats == 0))
+
+    points = []
+    with tempfile.TemporaryDirectory() as td:
+        eng = SVFusionEngine(vecs, EngineConfig(
+            degree=16, cache_slots=512, capacity=2 * n,
+            disk_path=td, disk_capacity=2 * n, host_window=n // 4,
+            search=sp, seed=seed, coalesce=False, pq_enabled=True,
+            pq_m=dim // 2, rerank_depth=32, attributes=schema,
+            filter_fallback_selectivity=FALLBACK_THRESHOLD),
+            init_attrs={"cat": cats, "score": scores})
+        try:
+            unfiltered_qps = _timed_qps(eng, queries, None)
+            ufound, _ = eng.search(queries, update_cache=False)
+            truth = _exact_filtered_topk(vecs, queries,
+                                         np.ones(n, bool), 10)
+            unfiltered_recall = _recall(np.asarray(ufound)[:, :10], truth)
+            for kind, sel, spec, mask in cases:
+                found, _ = eng.search(queries, filter=spec,
+                                      update_cache=False)
+                st = eng.stats()
+                truth = _exact_filtered_topk(vecs, queries, mask, 10)
+                points.append({
+                    "kind": kind, "selectivity": sel,
+                    "matches": int(mask.sum()),
+                    "recall": _recall(np.asarray(found)[:, :10], truth),
+                    "qps": _timed_qps(eng, queries, spec),
+                    "path": st["filter_last_path"],
+                    "measured_selectivity": st["filter_last_selectivity"],
+                })
+        finally:
+            eng.close()
+
+    results = {"meta": dict(meta,
+                            timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")),
+               "unfiltered": {"search_qps": unfiltered_qps,
+                              "recall": unfiltered_recall},
+               "filtered": points}
+    path = _append_result(
+        results, path=os.path.join(RESULTS_DIR, "bench_filtered.json"))
+    print(f"bench_filtered: appended run entry to {path} "
+          f"(key {config_key(results['meta'])})", flush=True)
+    for p in points:
+        print(f"  {p['kind']:>5} sel={p['selectivity']:<6} "
+              f"matches={p['matches']:<4} path={p['path']:<8} "
+              f"recall@10={p['recall']:.3f} qps={p['qps']:.0f}", flush=True)
+    print(f"  unfiltered: recall@10={unfiltered_recall:.3f} "
+          f"qps={unfiltered_qps:.0f}", flush=True)
+
+    fails = []
+    for p in points:
+        want = ("fallback" if p["selectivity"] < FALLBACK_THRESHOLD
+                else "graph")
+        if p["path"] != want:
+            fails.append(f"{p['kind']} sel={p['selectivity']}: router "
+                         f"chose {p['path']}, expected {want}")
+    ten_pct = [p for p in points if p["selectivity"] == 0.1
+               or p["kind"] == "tag"]
+    for p in ten_pct:
+        if p["recall"] < 0.9:
+            fails.append(f"{p['kind']} sel={p['selectivity']}: recall@10 "
+                         f"{p['recall']:.3f} < 0.9")
+    tag = next(p for p in points if p["kind"] == "tag")
+    if tag["qps"] < 0.5 * unfiltered_qps:
+        fails.append(f"filtered QPS at 10% tag selectivity "
+                     f"{tag['qps']:.0f} < 0.5x unfiltered "
+                     f"{unfiltered_qps:.0f}")
+    if fails:
+        for f in fails:
+            print(f"bench_filtered {'gate FAIL' if gate else 'WARN'}: {f}",
+                  file=sys.stderr)
+        if gate:
+            raise SystemExit(1)
+    elif gate:
+        print("bench_filtered gate: pass (router paths, recall@10 >= 0.9 "
+              "at 10% selectivity, filtered QPS >= 0.5x unfiltered)")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI variant (default config IS the "
+                         "smoke config; flag kept for CLI symmetry)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on router misroutes, recall@10 < 0.9 at "
+                         "10%% selectivity, or filtered QPS < 0.5x "
+                         "unfiltered")
+    ap.add_argument("--n", type=int, default=1200)
+    ap.add_argument("--dim", type=int, default=16)
+    args = ap.parse_args()
+    main(n=args.n, dim=args.dim, gate=args.gate)

@@ -105,6 +105,12 @@ class EngineConfig:
     #                                      shed at admission
     slo_restore_after: int = 4           # calm dispatches per one-level
     #                                      degradation restore
+    slo_tenant_rate_limits: Optional[dict] = None  # tenant -> requests/s
+    #                                      (or (rate, burst)): token bucket
+    #                                      at admission; an empty bucket
+    #                                      rejects with slo.RateLimitError,
+    #                                      counted per tenant in
+    #                                      stats()["slo"]
     wavp_cascade_promote: bool = True    # cascade hits displace frozen slots
     # -- PQ code lane (quant.py): device-resident ADC scan + exact re-rank
     pq_enabled: bool = False             # coarse-then-refine tiered search
@@ -141,6 +147,18 @@ class EngineConfig:
     #                                      between automatic snapshot
     #                                      publications; 0 = publish only at
     #                                      open and close
+    # -- filtered search (core/filters.py): per-id attribute store +
+    #    in-dispatch predicate lane --
+    attributes: Optional[object] = None  # filters.AttributeSchema: fixed
+    #                                      tag/numeric columns per id
+    #                                      (tiered mode only). Enables
+    #                                      search(filter=FilterSpec(...))
+    filter_fallback_selectivity: float = 0.1  # sampled selectivity below
+    #                                      which a filtered query routes to
+    #                                      the brute-force ADC scan over
+    #                                      the matched set (a graph walk
+    #                                      starves when almost nothing
+    #                                      passes); 0 disables the fallback
     cache_dtype: str = "bf16"            # exact-cache payload dtype:
     #                                      bf16 halves device vector bytes
     #                                      (re-rank upcasts to fp32);
@@ -165,9 +183,9 @@ class _SearchFuture:
     dispatcher skip-and-fail it once unmeetable."""
 
     __slots__ = ("queries", "submitted", "_event", "ids", "dists", "error",
-                 "latency", "tenant", "deadline")
+                 "latency", "tenant", "deadline", "filter", "fkey")
 
-    def __init__(self, queries, tenant=None, deadline=None):
+    def __init__(self, queries, tenant=None, deadline=None, filter=None):
         self.queries = queries
         self.submitted = time.perf_counter()
         self._event = threading.Event()
@@ -179,6 +197,10 @@ class _SearchFuture:
         # relative seconds -> absolute deadline on the submit clock
         self.deadline = None if deadline is None \
             else self.submitted + float(deadline)
+        # filter-spec compatibility class: the serving tier coalesces
+        # only requests whose fkey matches (one dispatch, one predicate)
+        self.filter = filter
+        self.fkey = None if filter is None else filter.key()
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -231,21 +253,25 @@ class CoalescingScheduler:
         self.degraded_dispatches = 0  # dispatches run at level > 0
 
     # -- client side ----------------------------------------------------
-    def submit(self, queries, tenant=None, deadline=None) -> _SearchFuture:
+    def submit(self, queries, tenant=None, deadline=None,
+               filter=None) -> _SearchFuture:
         """Enqueue one request. ``tenant`` keys the fair-share admission
         queue (None -> default tenant); ``deadline`` is seconds from now
-        after which the result is worthless (None -> policy default).
+        after which the result is worthless (None -> policy default);
+        ``filter`` is a ``filters.FilterSpec`` — only requests with an
+        equal spec share a dispatch (the tier demuxes by ``fkey``).
         A shed request comes back as a future already failed with
         ``slo.LoadShedError``."""
         fut = _SearchFuture(np.asarray(queries, np.float32),
-                            tenant=tenant, deadline=deadline)
+                            tenant=tenant, deadline=deadline,
+                            filter=filter)
         self._ensure_started()
         self.tier.offer(fut)   # raises after stop(); sheds via the future
         return fut
 
-    def search(self, queries, tenant=None, deadline=None):
+    def search(self, queries, tenant=None, deadline=None, filter=None):
         return self.submit(queries, tenant=tenant,
-                           deadline=deadline).result()
+                           deadline=deadline, filter=filter).result()
 
     # -- dispatcher -----------------------------------------------------
     def _ensure_started(self):
@@ -270,6 +296,9 @@ class CoalescingScheduler:
             t0 = time.perf_counter()
             try:
                 kw = {"degrade": level} if level > 0 else {}
+                if batch[0].filter is not None:
+                    # the tier guarantees a filter-homogeneous batch
+                    kw["filter"] = batch[0].filter
                 ids, dists = self._search(
                     np.concatenate([f.queries for f in batch], axis=0),
                     **kw)
@@ -368,8 +397,9 @@ class SVFusionEngine:
     jitted gather+distance+topk-merge dispatch per round.
     """
 
-    def __init__(self, init_vectors, cfg: EngineConfig):
+    def __init__(self, init_vectors, cfg: EngineConfig, init_attrs=None):
         self.cfg = cfg
+        self._init_attrs = init_attrs      # seed attributes (tiered mode)
         self._key = jax.random.PRNGKey(cfg.seed)
         self._state_lock = threading.RLock()   # publish/subscribe
         self._update_lock = threading.Lock()   # serializes the update stream
@@ -391,6 +421,14 @@ class SVFusionEngine:
                 "pq_enabled requires the three-tier mode (set disk_path): "
                 "the PQ code lane rides the tiered executor; device mode "
                 "would silently serve exact fp32 instead")
+        if cfg.attributes is not None and not cfg.disk_path:
+            raise ValueError(
+                "attributes (filtered search) require the three-tier mode "
+                "(set disk_path): the attribute store rides the tiered "
+                "backend")
+        if init_attrs is not None and cfg.attributes is None:
+            raise ValueError("init_attrs passed but cfg.attributes is "
+                             "unset: declare the attribute schema")
         if cfg.disk_path:
             self._init_tiered(init_vectors, cfg)
         else:
@@ -415,6 +453,11 @@ class SVFusionEngine:
         self._spec_misses = 0
         self._topo_hits = 0            # fused-loop topology-cache hits
         self._topo_misses = 0
+        self._filtered_searches = 0    # filtered-search batch counter
+        self._filter_fallbacks = 0     # ... of which took the brute-force
+        #                                low-selectivity path
+        self._filter_last_selectivity = None
+        self._filter_last_path = None
         self._coalescer = (CoalescingScheduler(
             self._search_exec, max_batch=cfg.coalesce_max_batch,
             max_window=cfg.coalesce_window,
@@ -425,7 +468,8 @@ class SVFusionEngine:
                 degrade_order=tuple(cfg.slo_degrade_order),
                 degrade_at=cfg.slo_degrade_at,
                 shed_at=cfg.slo_shed_at,
-                restore_after=cfg.slo_restore_after))
+                restore_after=cfg.slo_restore_after,
+                tenant_rate_limits=cfg.slo_tenant_rate_limits))
             if cfg.coalesce else None)
         self._bg_threads: list = []
         self.latencies: dict[str, list] = {"search": [], "insert": [],
@@ -444,6 +488,10 @@ class SVFusionEngine:
                     "disk_path holds a published durable index; pass "
                     "init_vectors=None to recover it, or point disk_path "
                     "at a fresh directory to build")
+            if self._init_attrs is not None:
+                raise ValueError(
+                    "disk_path holds a published durable index; seed "
+                    "attributes (init_attrs) only apply to a fresh build")
             if not cfg.wal_enabled:
                 raise ValueError(
                     "disk_path holds a published durable index but "
@@ -476,6 +524,24 @@ class SVFusionEngine:
                 host_window=cfg.host_window, seed=cfg.seed,
                 n_partitions=cfg.build_partitions,
                 cross_samples=cfg.build_cross_samples)
+        if cfg.attributes is not None:
+            from repro.core.tiers import AttributeStore
+            if self._backend.attrs is None:
+                if man is not None:
+                    # pre-attribute manifest: recovery proceeds with an
+                    # empty store (columns default; filters still work,
+                    # matching nothing non-default) — backward compat
+                    self._backend.attach_attrs(
+                        AttributeStore(cfg.attributes, cap))
+                else:
+                    tags, nums = cfg.attributes.coerce(self._init_attrs, n)
+                    self._backend.attach_attrs(AttributeStore(
+                        cfg.attributes, cap, tags=tags, nums=nums))
+            elif self._backend.attrs.schema != cfg.attributes:
+                raise ValueError(
+                    f"attribute schema mismatch: config declares "
+                    f"{cfg.attributes}, the durable index recovered "
+                    f"{self._backend.attrs.schema}")
         if cfg.cache_dtype not in ("bf16", "fp32"):
             raise ValueError(f"cache_dtype must be bf16|fp32, got "
                              f"{cfg.cache_dtype!r}")
@@ -570,7 +636,7 @@ class SVFusionEngine:
 
     # ------------------------------------------------------------------
     def search(self, queries, update_cache=True, tenant=None,
-               deadline=None):
+               deadline=None, filter=None):
         """Batched search. Returns (ids, dists) as numpy. With coalescing
         enabled (default) the request joins the engine's adaptive
         cross-query micro-batch through the SLO serving tier: concurrent
@@ -582,30 +648,37 @@ class SVFusionEngine:
         adaptive resource management). ``tenant`` keys the weighted-fair
         admission queue; ``deadline`` (seconds from now) lets the
         dispatcher skip the request once unmeetable — both failure modes
-        raise (``slo.LoadShedError`` / ``slo.DeadlineMissError``)."""
+        raise (``slo.LoadShedError`` / ``slo.DeadlineMissError``).
+        ``filter`` (a ``filters.FilterSpec``) restricts results to ids
+        whose attributes pass the predicate — requires
+        ``cfg.attributes``; only filter-spec-equal requests coalesce."""
         queries = np.asarray(queries, np.float32)
         if self._coalescer is not None and update_cache and len(queries):
             return self._coalescer.search(queries, tenant=tenant,
-                                          deadline=deadline)
-        return self._search_exec(queries, update_cache)
+                                          deadline=deadline, filter=filter)
+        return self._search_exec(queries, update_cache, filter=filter)
 
-    def submit_search(self, queries, tenant=None, deadline=None):
+    def submit_search(self, queries, tenant=None, deadline=None,
+                      filter=None):
         """Async entry to the coalescing scheduler: returns a future-like
         handle (``.result() -> (ids, dists)``, ``.latency``). Concurrent
-        submitters share executor dispatches; ``tenant``/``deadline``
-        as in ``search``."""
+        submitters share executor dispatches; ``tenant``/``deadline``/
+        ``filter`` as in ``search`` (only filter-spec-equal requests
+        share a dispatch)."""
         queries = np.asarray(queries, np.float32)
         if self._coalescer is None:
-            fut = _SearchFuture(queries, tenant=tenant, deadline=deadline)
+            fut = _SearchFuture(queries, tenant=tenant, deadline=deadline,
+                                filter=filter)
             try:
-                fut.ids, fut.dists = self._search_exec(queries)
+                fut.ids, fut.dists = self._search_exec(queries,
+                                                       filter=filter)
                 fut.latency = time.perf_counter() - fut.submitted
             except Exception as e:   # pragma: no cover - surfaced by result()
                 fut.error = e
             fut._event.set()
             return fut
         return self._coalescer.submit(queries, tenant=tenant,
-                                      deadline=deadline)
+                                      deadline=deadline, filter=filter)
 
     def _degraded_knobs(self, degrade: int):
         """SearchParams + rerank depth at degradation ``degrade`` (the
@@ -617,13 +690,17 @@ class SVFusionEngine:
                                   degrade,
                                   tuple(self.cfg.slo_degrade_order))
 
-    def _search_exec(self, queries, update_cache=True, degrade=0):
+    def _search_exec(self, queries, update_cache=True, degrade=0,
+                     filter=None):
         """One executor invocation (the coalescer's dispatch target).
         ``degrade`` > 0 dispatches at reduced search quality (graceful
         degradation under overload — see ``core.slo``)."""
         if self._backend is not None:
             return self._search_tiered(queries, update_cache,
-                                       degrade=degrade)
+                                       degrade=degrade, filter=filter)
+        if filter is not None:
+            raise ValueError("filtered search requires the three-tier "
+                             "mode with cfg.attributes set")
         t0 = time.perf_counter()
         sp, _ = self._degraded_knobs(degrade)
         st = self._read_state()
@@ -652,7 +729,8 @@ class SVFusionEngine:
         self.latencies["search"].append(time.perf_counter() - t0)
         return ids, np.asarray(res.dists)
 
-    def _search_tiered(self, queries, update_cache=True, degrade=0):
+    def _search_tiered(self, queries, update_cache=True, degrade=0,
+                       filter=None):
         """Three-tier search: speculative pipeline + cascading lookup +
         post-batch host placement. Batches are padded to power-of-two
         buckets so the coalescer's variable micro-batch sizes compile
@@ -682,7 +760,9 @@ class SVFusionEngine:
             pq=(backend.pq if self.cfg.pq_enabled else None),
             rerank_depth=rerank_depth,
             topo=(backend.topo if self.cfg.pq_enabled else None),
-            fused_rounds=self.cfg.fused_rounds)
+            fused_rounds=self.cfg.fused_rounds,
+            filter=filter,
+            filter_fallback_selectivity=self.cfg.filter_fallback_selectivity)
         if Bp != B:   # drop pad lanes from results AND placement logs
             res = res._replace(ids=res.ids[:B], dists=res.dists[:B],
                                acc_ids=res.acc_ids[:B],
@@ -695,6 +775,12 @@ class SVFusionEngine:
             self._spec_misses += res.spec_misses
             self._topo_hits += res.topo_hits
             self._topo_misses += res.topo_misses
+            if res.filter_path != "none":
+                self._filtered_searches += 1
+                if res.filter_path == "fallback":
+                    self._filter_fallbacks += 1
+                self._filter_last_selectivity = res.filter_selectivity
+                self._filter_last_path = res.filter_path
         if update_cache:
             with self._cache_lock:
                 Cache.apply_wavp_host(
@@ -708,13 +794,23 @@ class SVFusionEngine:
         self.latencies["search"].append(time.perf_counter() - t0)
         return res.ids, res.dists
 
-    def insert(self, vectors, chunk=512):
+    def insert(self, vectors, chunk=512, attributes=None):
         """Insert vectors (chunked so each chunk links into the graph the
         previous chunks built; a near-empty index is bootstrapped with an
-        exact KNN stitch among the first chunk)."""
+        exact KNN stitch among the first chunk). ``attributes`` (dict of
+        column -> per-row values, see ``filters.AttributeSchema.coerce``)
+        tags the batch for filtered search — requires ``cfg.attributes``
+        and the three-tier mode."""
         t0 = time.perf_counter()
         self._check_writable()
         vectors = np.asarray(vectors, np.float32)
+        attr_cols = None
+        if attributes is not None:
+            if self._backend is None or self._backend.attrs is None:
+                raise ValueError("insert(attributes=...) requires the "
+                                 "three-tier mode with cfg.attributes set")
+            attr_cols = self._backend.attrs.schema.coerce(
+                attributes, len(vectors))
         out = []
         with self._update_lock:
             for s in range(0, len(vectors), chunk):
@@ -722,10 +818,14 @@ class SVFusionEngine:
                 if self._backend is not None:
                     with self._cache_lock:
                         seed = int(self._rng.integers(0, 2 ** 31 - 1))
+                    part_attrs = None
+                    if attr_cols is not None:
+                        part_attrs = (attr_cols[0][s:s + chunk],
+                                      attr_cols[1][s:s + chunk])
                     try:
                         ids, rev = update.insert_tiered(
                             self._backend, self._placement, part_np,
-                            self.cfg.search, seed)
+                            self.cfg.search, seed, attributes=part_attrs)
                     except walmod.WALWriteError as e:
                         self._degrade(str(e))
                     if self._snapshot_n is not None and len(rev.v):
@@ -1032,6 +1132,14 @@ class SVFusionEngine:
                 d["wal_last_seq"] = self._wal.last_seq
                 d["wal_records"] = self._wal.appended
                 d["durable_epoch"] = self._durable_epoch
+            # filter lane observability: counts, last routing decision and
+            # the selectivity threshold the router compares against
+            d["filtered_searches"] = self._filtered_searches
+            d["filter_fallbacks"] = self._filter_fallbacks
+            d["filter_last_selectivity"] = self._filter_last_selectivity
+            d["filter_last_path"] = self._filter_last_path
+            d["filter_fallback_selectivity"] = \
+                self.cfg.filter_fallback_selectivity
             if self._recovery is not None:
                 d["recovered_epoch"] = self._recovery["epoch"]
                 d["recovered_replayed"] = self._recovery["replayed"]

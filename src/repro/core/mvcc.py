@@ -83,7 +83,12 @@ def concat_rev_logs(logs) -> RevLog:
 
 class TieredSnapshot(NamedTuple):
     """Frozen view of the disk-tier graph metadata at snapshot time.
-    Vectors are immutable per id and deliberately NOT copied."""
+    Vectors are immutable per id and deliberately NOT copied. Filter
+    attributes (``tiers.AttributeStore``) are likewise per-id immutable
+    once written by their INSERT op, so consolidation — which rebuilds
+    adjacency only — carries them through unchanged: the merge never
+    reads or writes attribute columns, and a snapshot taken mid-window
+    needs no attribute copy."""
     n: int                # high-water mark at snapshot time
     rows: np.ndarray      # [n, R] int32 adjacency at snapshot time
     alive: np.ndarray     # [n] bool alive bitset at snapshot time

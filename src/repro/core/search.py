@@ -457,7 +457,8 @@ def _pq_fused_dispatch(pool_ids, pool_d, visited, curr, r, acc_ids,
 
 def _fused_topo_shell(store, topo, spec, alive, f_lam, pq, codes_j,
                       codes_epoch, lut, pool_ids, pool_d, visited, curr_j,
-                      beam, rounds, id_bound, fused_rounds, stage_width=0):
+                      beam, rounds, id_bound, fused_rounds, stage_width=0,
+                      alive_j=None):
     """Host fallback shell around ``_pq_fused_dispatch``: the executor's
     round loop when a topology cache is attached. Steady state is ONE
     fused dispatch covering every remaining round (dispatches/query drops
@@ -519,7 +520,11 @@ def _fused_topo_shell(store, topo, spec, alive, f_lam, pq, codes_j,
             out = _pq_fused_dispatch(
                 pool_ids, pool_d, visited, curr_j,
                 jnp.asarray(r, jnp.int32), acc_j, rows_j, h2s_j, codes_j,
-                lut, jnp.asarray(alive),
+                lut,
+                # filtered search supplies the device-resident composite
+                # mask (alive AND the predicate evaluated against the
+                # attribute mirror); unfiltered ships the live bitset
+                alive_j if alive_j is not None else jnp.asarray(alive),
                 jnp.asarray(min(r + K, rounds), jnp.int32), beam, id_bound)
             dispatches += 1
             if spec is not None:
@@ -568,6 +573,24 @@ def _fused_topo_shell(store, topo, spec, alive, f_lam, pq, codes_j,
     return pool_ids, pool_d, acc, r, dispatches, hits, misses
 
 
+@partial(jax.jit, static_argnames=("depth",))
+def _pq_filtered_scan_dispatch(codes, centroids, queries, cand_ids, depth):
+    """Brute-force ADC scan over a filtered id set — the low-selectivity
+    fallback's coarse stage: ONE ``pq_adc`` dispatch scoring every
+    matching id (shipped as a -1-padded [B, Mp] matrix; the kernels map
+    id -1 to +inf exactly as the graph lane's invalid-lane masking does)
+    and keeping the top ``depth`` for the unchanged exact re-rank. No
+    traversal: below the selectivity threshold a graph walk starves
+    (too few passing candidates to sustain a frontier), while one flat
+    scan over the matched set is small by definition."""
+    lut = adc_lut(centroids, queries)
+    d = adc_gather(codes, lut, cand_ids)
+    d = jnp.where(cand_ids >= 0, d, INF)
+    nd, idx = jax.lax.top_k(-d, depth)
+    ids = jnp.take_along_axis(cand_ids, idx, axis=1)
+    return jnp.where(jnp.isfinite(-nd), ids, -1), -nd
+
+
 @partial(jax.jit, static_argnames=("k",))
 def _pq_rerank_dispatch(top_ids, uniq_vecs, cand_inv, valid, queries, k):
     """Tier-cascade exact re-rank: the top ``depth`` ADC-ranked pool
@@ -614,6 +637,8 @@ class TieredSearchResult(NamedTuple):
     spec_misses: int = 0  # frontier rows delta-fetched after read-back
     topo_hits: int = 0    # frontier ids resident in the topology cache
     topo_misses: int = 0  # frontier ids delta-fetched + installed
+    filter_path: str = "none"        # "none" | "graph" | "fallback"
+    filter_selectivity: float = 1.0  # admission-time sampled estimate
 
     @property
     def spec_hit_rate(self) -> float:
@@ -873,13 +898,75 @@ def effective_rerank_depth(rerank_depth: int, k: int, pool: int) -> int:
     return pool if rerank_depth <= 0 else max(k, min(rerank_depth, pool))
 
 
+def _filtered_brute_force(backend, queries, qj, hmask, alive_snap, sp,
+                          pq, rerank_depth, h2d, cache_vec, f_lam,
+                          filter_sel) -> TieredSearchResult:
+    """Selectivity-adaptive fallback arm of ``search_tiered``: exact
+    search restricted to the matched id set, no graph traversal. PQ
+    mode: ONE ``pq_adc`` scan over the matched ids keeps the top
+    ``rerank_depth``, then the executor's unchanged exact re-rank
+    dispatch; exact mode: the re-rank dispatch alone over every match.
+    Results are exact over the matched set by construction (modulo PQ
+    pre-ranking when ``rerank_depth`` < matches), so this path's output
+    at full depth is bit-identical to post-filtering an exhaustive
+    scan — the property the filter suite pins."""
+    B = queries.shape[0]
+    k = sp.k
+    n = max(backend.n, 1)
+    matched = np.where(alive_snap[:n] & hmask[:n])[0]
+    if matched.size == 0:
+        z = np.zeros((B, 0), np.int32)
+        return TieredSearchResult(
+            np.full((B, k), -1, np.int32),
+            np.full((B, k), np.inf, np.float32),
+            z, z.astype(bool), 0, 0,
+            filter_path="fallback", filter_selectivity=filter_sel)
+    Mp = _pow2_bucket(matched.size)
+    cand = np.full((Mp,), -1, np.int64)
+    cand[:matched.size] = matched
+    cand_ids = np.broadcast_to(cand, (B, Mp))
+    dispatches = 0
+    if pq is not None:
+        codes_j = pq.synced_codes()
+        depth = min(effective_rerank_depth(rerank_depth, k, sp.pool), Mp)
+        top_j, _ = _pq_filtered_scan_dispatch(
+            codes_j, pq.codebook.centroids, qj,
+            jnp.asarray(cand_ids, jnp.int32), depth)
+        dispatches += 1
+        top_ids = np.asarray(top_j, np.int64)
+    else:
+        top_ids = cand_ids
+    valid_r = top_ids >= 0
+    uvec, _, inv = _ship_unique_vectors(
+        top_ids, valid_r,
+        lambda u: _resolve_unique_vectors(u, h2d, cache_vec, backend.store,
+                                          f_lam))
+    ids_k, d_k = _pq_rerank_dispatch(
+        jnp.asarray(top_ids, jnp.int32), jnp.asarray(uvec),
+        jnp.asarray(inv), jnp.asarray(valid_r), qj, k)
+    dispatches += 1
+    ids_np = np.asarray(ids_k, np.int32)
+    d_np = np.asarray(d_k, np.float32)
+    if ids_np.shape[1] < k:      # fewer matches than k: pad the tail
+        pad = k - ids_np.shape[1]
+        ids_np = np.pad(ids_np, ((0, 0), (0, pad)), constant_values=-1)
+        d_np = np.pad(d_np, ((0, 0), (0, pad)), constant_values=np.inf)
+    acc = np.where(valid_r, top_ids, -1).astype(np.int32)
+    acc_hit = (h2d[np.clip(acc, 0, None)] >= 0) & (acc >= 0)
+    return TieredSearchResult(ids_np, d_np, acc, acc_hit, 0, dispatches,
+                              filter_path="fallback",
+                              filter_selectivity=filter_sel)
+
+
 def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                   *, f_lam=None, prefetch_budget: int = 0,
                   entry_ids=None, speculate: bool = True,
                   spec_width: int = 0, spec_rank: str = "flam",
                   spec_predict=None, pq=None,
                   rerank_depth: int = 0, topo=None,
-                  fused_rounds: int = 0) -> TieredSearchResult:
+                  fused_rounds: int = 0, filter=None,
+                  filter_fallback_selectivity: float = 0.0,
+                  filter_sample: int = 1024) -> TieredSearchResult:
     """Hop-batched frontier search over a disk-backed graph (paper
     Algorithm 1 in its GPU-CPU-disk form) — the tiered arm of the shared
     executor, run as a two-stage speculative pipeline. Per round: ONE
@@ -928,6 +1015,16 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
     ``fused_rounds`` budget (0 = uncapped). Results are bit-identical to
     the per-round executor (parity suite pins K ∈ {1, 2, 4} and forced
     0%/100% topology hit rates).
+
+    ``filter``: a ``filters.FilterSpec`` metadata predicate — requires an
+    attached ``backend.attrs`` store. Selectivity is sampled at admission
+    (``filter_sample`` ids, deterministic in ``seed``): at or above
+    ``filter_fallback_selectivity`` the predicate joins the executor's
+    invalid-lane masking (filtered-out candidates never enter the pool,
+    both arms); below it the query routes to the brute-force scan over
+    the matched set (``_filtered_brute_force``). The chosen path and the
+    measured selectivity ride the result (``filter_path`` /
+    ``filter_selectivity``).
     """
     store = backend.store
     alive = backend.alive
@@ -948,6 +1045,37 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
     n = max(backend.n, 1)
     id_bound = int(backend.capacity)
     qj = jnp.asarray(queries)
+
+    # --- predicate lane (core/filters.py) -------------------------------
+    filter_path, filter_sel = "none", 1.0
+    alive_j = None
+    if filter is not None:
+        from repro.core.filters import (compile_filter, device_pass_mask,
+                                        estimate_selectivity, host_pass)
+        attrs = backend.attrs
+        if attrs is None:
+            raise ValueError("filtered search requires an attached "
+                             "attribute store (EngineConfig.attributes)")
+        cf = compile_filter(filter, attrs.schema)
+        hmask = host_pass(cf, attrs.tags, attrs.nums)
+        filter_sel = estimate_selectivity(cf, attrs, alive, backend.n,
+                                          sample=filter_sample, seed=seed)
+        if filter_sel < filter_fallback_selectivity:
+            # graph walk would starve: brute-force scan the matched set
+            return _filtered_brute_force(backend, queries, qj, hmask,
+                                         alive, sp, pq, rerank_depth,
+                                         h2d, cache_vec, f_lam, filter_sel)
+        filter_path = "graph"
+        # composite alive: the predicate folds into the executor's
+        # existing -1/alive invalid-lane masking everywhere (entry pool,
+        # per-round valid, kernels' id -1 -> +inf), so filtered-out
+        # candidates never enter the pool. The host copy is a consistent
+        # cut of the bitset; the device twin below is ANDed from the
+        # epoch-synced attribute mirror for the fused in-cache rounds.
+        alive = alive & hmask                         # np copy, not a view
+        if pq is not None and topo is not None:
+            alive_j = jnp.asarray(backend.alive) & device_pass_mask(attrs,
+                                                                    cf)
     if entry_ids is None:
         rng = np.random.default_rng(seed)
         entry_ids = rng.integers(0, n, (B, L))
@@ -1020,7 +1148,8 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
             store, topo, spec, alive, f_lam, pq, codes_j, codes_epoch,
             lut, pool_ids, pool_d, visited, curr_j, beam, rounds,
             id_bound, fused_rounds,
-            stage_width=(width if spec is not None else 0))
+            stage_width=(width if spec is not None else 0),
+            alive_j=alive_j)
         dispatches += extra
     else:
         for _ in range(rounds):
@@ -1117,7 +1246,7 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
             np.asarray(ids_k, np.int32), np.asarray(d_k),
             flat, acc_hit_flat, it, dispatches,
             spec.hits if spec else 0, spec.misses if spec else 0,
-            topo_hits, topo_misses)
+            topo_hits, topo_misses, filter_path, filter_sel)
 
     pool_ids, pool_d = np.asarray(pool_ids), np.asarray(pool_d)
     topk_ids = np.where(np.isfinite(pool_d[:, :k]), pool_ids[:, :k], -1)
@@ -1125,7 +1254,9 @@ def search_tiered(backend, cache_mirror, queries, seed, sp: SearchParams,
                               acc_ids.reshape(B, -1),
                               acc_hit.reshape(B, -1), it, dispatches,
                               spec.hits if spec else 0,
-                              spec.misses if spec else 0)
+                              spec.misses if spec else 0,
+                              filter_path=filter_path,
+                              filter_selectivity=filter_sel)
 
 
 def brute_force_topk(graph: GraphState, queries, k):

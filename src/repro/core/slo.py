@@ -73,6 +73,14 @@ class DeadlineMissError(SLOError):
     even if dispatched immediately."""
 
 
+class RateLimitError(SLOError):
+    """Admission rejected the request: the tenant's token bucket
+    (``SLOPolicy.tenant_rate_limits``) is empty."""
+
+
+_NO_KEY = object()   # _pop_next sentinel: no filter-compatibility pin
+
+
 @dataclass(frozen=True)
 class SLOPolicy:
     """Knobs of the serving tier (engine config: ``slo_*``)."""
@@ -96,6 +104,11 @@ class SLOPolicy:
     restore_after: int = 4          # consecutive calm dispatches per
     #                                 one-level restore (hysteresis)
     reservoir: int = 512            # latency samples kept per reservoir
+    tenant_rate_limits: Optional[dict] = None   # tenant -> requests/s,
+    #                                 or (rate, burst); absent = unlimited.
+    #                                 Token bucket at offer: an empty
+    #                                 bucket rejects with RateLimitError
+    #                                 (counted per tenant in stats())
 
     @property
     def enabled(self) -> bool:
@@ -111,6 +124,22 @@ class SLOPolicy:
             raise ValueError(f"tenant weight must be > 0, got {w} for "
                              f"{tenant!r}")
         return float(w)
+
+    def rate_limit(self, tenant: str):
+        """``(rate, burst)`` for ``tenant`` or None (unlimited). A bare
+        rate gets ``burst = max(1, rate)`` — a one-second burst window,
+        never below one admittable request."""
+        rl = (self.tenant_rate_limits or {}).get(tenant)
+        if rl is None:
+            return None
+        if isinstance(rl, (tuple, list)):
+            rate, burst = float(rl[0]), float(rl[1])
+        else:
+            rate, burst = float(rl), max(1.0, float(rl))
+        if rate <= 0 or burst <= 0:
+            raise ValueError(f"rate limit for {tenant!r} must be > 0, "
+                             f"got rate={rate}, burst={burst}")
+        return rate, burst
 
     def level_threshold(self, level: int) -> float:
         """Pressure at which ``level`` engages (levels 1..n_levels spread
@@ -224,7 +253,7 @@ class _TenantState:
 
     __slots__ = ("name", "weight", "q", "queued_rows", "vtime",
                  "submitted", "completed", "shed", "deadline_misses",
-                 "lat")
+                 "lat", "tokens", "rl_t", "rate_limited")
 
     def __init__(self, name: str, weight: float, reservoir: int):
         self.name = name
@@ -237,6 +266,9 @@ class _TenantState:
         self.shed = 0
         self.deadline_misses = 0
         self.lat = LatencyReservoir(reservoir)
+        self.tokens = 0.0       # token bucket (lazily filled at first offer)
+        self.rl_t: Optional[float] = None   # last refill timestamp
+        self.rate_limited = 0
 
 
 class ServingTier:
@@ -259,6 +291,7 @@ class ServingTier:
         self.est_dispatch_s: Optional[float] = None  # EWMA dispatch wall
         self.shed_total = 0
         self.deadline_miss_total = 0
+        self.rate_limited_total = 0
         self.overshoot_avoided = 0   # admissions deferred at the batch cap
         self.pressure = 0.0
 
@@ -304,6 +337,29 @@ class ServingTier:
                     "further searches accepted")
             ts = self._tenant(fut.tenant)
             ts.submitted += 1
+            # token-bucket rate limit (per tenant, requests/s): refill
+            # from wall time, then spend one token or reject. Runs before
+            # the shed check — a limit violation is the tenant's own
+            # doing and must not depend on global pressure state.
+            rl = self.policy.rate_limit(ts.name)
+            if rl is not None:
+                rate, burst = rl
+                now = time.perf_counter()
+                if ts.rl_t is None:
+                    ts.tokens = burst           # full bucket at first sight
+                else:
+                    ts.tokens = min(burst,
+                                    ts.tokens + (now - ts.rl_t) * rate)
+                ts.rl_t = now
+                if ts.tokens < 1.0:
+                    ts.rate_limited += 1
+                    self.rate_limited_total += 1
+                    fut.error = RateLimitError(
+                        f"tenant {ts.name!r} rate-limited: bucket empty "
+                        f"(rate {rate:g}/s, burst {burst:g})")
+                    fut._event.set()
+                    return False
+                ts.tokens -= 1.0
             wait = self._fair_wait(ts)
             if (self.policy.enabled
                     and self.controller.level >= self.policy.n_levels
@@ -331,46 +387,61 @@ class ServingTier:
         return True
 
     # -- dispatcher side ------------------------------------------------
-    def _pop_next(self, rows: int, max_batch: int):
+    def _pop_next(self, rows: int, max_batch: int, fkey=_NO_KEY):
         """One weighted-fair pop (caller holds the lock): pick the
         non-empty tenant with the least virtual time, fail-and-skip
         heads whose deadline is already unmeetable, and refuse (peek,
         don't admit) a head that would push the batch past ``max_batch``
         — the pow2 padding bucket must not jump a size because one more
-        request squeezed in after the cap was reached."""
+        request squeezed in after the cap was reached.
+
+        ``fkey`` pins the batch's filter-spec compatibility class: only
+        heads whose ``fkey`` matches may join (one executor dispatch
+        evaluates ONE predicate). Incompatible heads are left queued —
+        they lead the next batch — but their tenants are *skipped*, in
+        vtime order, so a filtered hot tenant can't stall everyone."""
         est = self.est_dispatch_s or 0.0
         while True:
-            act = [t for t in self.tenants.values() if t.q]
+            act = sorted((t for t in self.tenants.values() if t.q),
+                         key=lambda t: t.vtime)
             if not act:
                 return None
-            ts = min(act, key=lambda t: t.vtime)
-            fut = ts.q[0]
-            r = len(fut.queries)
-            now = time.perf_counter()
-            if fut.deadline is not None and now + est > fut.deadline:
-                # skip-and-fail: the answer would arrive past the
-                # deadline even if dispatched right now
+            rescan = False
+            for ts in act:
+                fut = ts.q[0]
+                r = len(fut.queries)
+                now = time.perf_counter()
+                if fut.deadline is not None and now + est > fut.deadline:
+                    # skip-and-fail: the answer would arrive past the
+                    # deadline even if dispatched right now
+                    ts.q.popleft()
+                    ts.queued_rows -= r
+                    self._queued_requests -= 1
+                    self._queued_rows -= r
+                    ts.deadline_misses += 1
+                    self.deadline_miss_total += 1
+                    fut.error = DeadlineMissError(
+                        f"tenant {ts.name!r} request missed its deadline "
+                        f"before dispatch "
+                        f"({(now - fut.submitted) * 1e3:.1f} "
+                        f"ms queued, est dispatch {est * 1e3:.1f} ms)")
+                    fut._event.set()
+                    rescan = True    # queue changed: re-derive the order
+                    break
+                if fkey is not _NO_KEY \
+                        and getattr(fut, "fkey", None) != fkey:
+                    continue        # incompatible head: try next tenant
+                if rows > 0 and rows + r > max_batch:
+                    self.overshoot_avoided += 1
+                    return None     # re-queued for the next dispatch
                 ts.q.popleft()
                 ts.queued_rows -= r
                 self._queued_requests -= 1
                 self._queued_rows -= r
-                ts.deadline_misses += 1
-                self.deadline_miss_total += 1
-                fut.error = DeadlineMissError(
-                    f"tenant {ts.name!r} request missed its deadline "
-                    f"before dispatch ({(now - fut.submitted) * 1e3:.1f} "
-                    f"ms queued, est dispatch {est * 1e3:.1f} ms)")
-                fut._event.set()
-                continue
-            if rows > 0 and rows + r > max_batch:
-                self.overshoot_avoided += 1
-                return None     # re-queued for the next dispatch
-            ts.q.popleft()
-            ts.queued_rows -= r
-            self._queued_requests -= 1
-            self._queued_rows -= r
-            ts.vtime += r / ts.weight
-            return fut
+                ts.vtime += r / ts.weight
+                return fut
+            if not rescan:
+                return None
 
     def collect(self, max_batch: int, window: float, stop) -> list:
         """Assemble one dispatch batch: block (briefly) for the first
@@ -391,10 +462,11 @@ class ServingTier:
                 return []
             batch = [first]
             rows = len(first.queries)
+            fkey = getattr(first, "fkey", None)   # batch's filter class
             deadline = time.perf_counter() + window
             while rows < max_batch and not self.closed \
                     and not stop.is_set():
-                nxt = self._pop_next(rows, max_batch)
+                nxt = self._pop_next(rows, max_batch, fkey=fkey)
                 if nxt is not None:
                     batch.append(nxt)
                     rows += len(nxt.queries)
@@ -448,6 +520,7 @@ class ServingTier:
             self.controller = PressureController(policy)
             for ts in self.tenants.values():
                 ts.weight = policy.weight(ts.name)
+                ts.rl_t = None      # limits moved: refill at next offer
 
     @property
     def level(self) -> int:
@@ -493,6 +566,7 @@ class ServingTier:
                     "completed": ts.completed,
                     "shed": ts.shed,
                     "deadline_misses": ts.deadline_misses,
+                    "rate_limited": ts.rate_limited,
                     "p50_ms": _ms(ts.lat.quantile(50)),
                     "p99_ms": _ms(ts.lat.quantile(99)),
                 }
@@ -505,6 +579,7 @@ class ServingTier:
                 "rows_per_s": self.rows_per_s or 0.0,
                 "shed": self.shed_total,
                 "deadline_misses": self.deadline_miss_total,
+                "rate_limited": self.rate_limited_total,
                 "overshoot_avoided": self.overshoot_avoided,
                 "p50_ms": _ms(self.lat.quantile(50)),
                 "p99_ms": _ms(self.lat.quantile(99)),

@@ -307,6 +307,72 @@ class TieredStore:
         return self.misses / tot if tot else 0.0
 
 
+class AttributeStore:
+    """Per-id fixed-schema attribute columns for filtered search
+    (``core.filters``): tag fields (small-domain uints, one int32 column
+    each) and numeric fields (fp32 columns) over the whole id space.
+
+    Follows the ``quant.PQCodes`` directory pattern exactly: host-truth
+    numpy columns written through by ``update.insert_tiered``, a device
+    mirror synced lazily per search batch (``synced`` folds all dirty
+    blocks in ONE scatter per column), and a locked ``snapshot`` for the
+    durability layer. Attributes are immutable per id (like vectors), so
+    consolidation/merge never rewrites them."""
+
+    def __init__(self, schema, capacity: int, tags=None, nums=None):
+        import jax.numpy as jnp
+        self.schema = schema
+        self.capacity = int(capacity)
+        self.tags = np.zeros((self.capacity, schema.n_tags), np.int32)
+        self.nums = np.zeros((self.capacity, schema.n_nums), np.float32)
+        if tags is not None:
+            self.tags[:len(tags)] = np.asarray(tags, np.int32)
+        if nums is not None:
+            self.nums[:len(nums)] = np.asarray(nums, np.float32)
+        self._tags_j = jnp.asarray(self.tags)
+        self._nums_j = jnp.asarray(self.nums)
+        self._dirty: list = []
+        self._lock = threading.Lock()
+        self.written = 0    # ids written through (observability)
+
+    def write(self, ids, tags, nums):
+        """Write-through attribute install for freshly inserted ids:
+        host truth now, device mirror folded at the next ``synced``."""
+        ids = np.asarray(ids, np.int64)
+        if not len(ids):
+            return
+        with self._lock:
+            self.tags[ids] = np.asarray(tags, np.int32)
+            self.nums[ids] = np.asarray(nums, np.float32)
+            self._dirty.append(ids.copy())
+            self.written += len(ids)
+
+    def synced(self):
+        """Device mirror columns with every host write folded in — ONE
+        ``.at[ids].set`` scatter per column regardless of how many write
+        batches accumulated (the PQCodes sync idiom)."""
+        import jax.numpy as jnp
+        with self._lock:
+            if self._dirty:
+                ids = np.concatenate(self._dirty)
+                self._dirty = []
+                idx = jnp.asarray(ids)
+                self._tags_j = self._tags_j.at[idx].set(
+                    jnp.asarray(self.tags[ids]))
+                self._nums_j = self._nums_j.at[idx].set(
+                    jnp.asarray(self.nums[ids]))
+            return self._tags_j, self._nums_j
+
+    def snapshot(self, n: int):
+        """Consistent host-truth copy of the live prefix (the durability
+        snapshot path; taken under the write lock)."""
+        with self._lock:
+            return self.tags[:n].copy(), self.nums[:n].copy()
+
+    def attr_bytes(self, n: int) -> int:
+        return int(n) * (self.schema.n_tags * 4 + self.schema.n_nums * 4)
+
+
 class TieredBackend:
     """Disk-backed capacity tier for ``SVFusionEngine``.
 
@@ -338,6 +404,11 @@ class TieredBackend:
         #                     path logs each op BEFORE mutating the store
         #                     (recovery replays the log over the last
         #                     published snapshot); owned by the engine
+        self.attrs = None   # AttributeStore (attach_attrs): per-id tag /
+        #                     numeric columns for the filtered-search
+        #                     predicate lane; host truth + epoch-synced
+        #                     device mirror, written through by
+        #                     update.insert_tiered, snapshot-persisted
 
     def attach_topo(self, topo) -> None:
         """Attach the device-resident topology row cache
@@ -365,6 +436,17 @@ class TieredBackend:
                 f"{self.capacity}")
         self.pq = pq
 
+    def attach_attrs(self, attrs) -> None:
+        """Attach the per-id attribute lane (``AttributeStore``). The
+        columns span the whole id space like alive/e_in; inserts write
+        through incrementally, filtered searches read the epoch-synced
+        device mirror."""
+        if attrs.capacity != self.capacity:
+            raise ValueError(
+                f"attribute store spans {attrs.capacity} ids, disk "
+                f"capacity is {self.capacity}")
+        self.attrs = attrs
+
     @property
     def capacity(self) -> int:
         return self.store.disk.capacity
@@ -390,6 +472,8 @@ class TieredBackend:
                "host_resident": s.resident}
         if self.pq is not None:
             out["pq_encoded_incremental"] = self.pq.encoded
+        if self.attrs is not None:
+            out["attrs_written"] = self.attrs.written
         if self.topo is not None:
             t = self.topo
             out.update(topo_hits=t.hits, topo_misses=t.misses,
@@ -415,6 +499,10 @@ class TieredBackend:
             # executor's device-resident adjacency lane)
             "device_topo_rows": (self.topo.row_bytes
                                  if self.topo is not None else 0),
+            # attribute columns are host+device resident like PQ codes;
+            # a few bytes/id, so they never threaten the vector budget
+            "host_attrs": (self.attrs.attr_bytes(self.n)
+                           if self.attrs is not None else 0),
         }
         return out
 

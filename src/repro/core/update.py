@@ -231,7 +231,8 @@ def reverse_edge_rows_host(trow, tvec, nbr_vecs, inv, new_ids, d_edge):
     return out
 
 
-def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
+def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed,
+                  attributes=None):
     """Batched insertion against the disk-backed capacity tier (paper §5.1
     over the three-tier hierarchy): candidate search cascades through the
     store, new rows are written through the host window, and reverse edges
@@ -248,6 +249,11 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     then applied by ``apply_insert_tiered`` — the same function crash
     recovery replays, so a recovered index is bit-identical to an
     uninterrupted run by construction.
+
+    ``attributes`` (optional) is the batch's filter-attribute payload in
+    any form ``filters.AttributeSchema.coerce`` accepts (dict of
+    columns, (tags, nums) pair, or None for schema defaults); requires
+    an attached ``backend.attrs`` store.
     """
     from repro.core.search import search_tiered
     store = backend.store
@@ -288,17 +294,29 @@ def insert_tiered(backend, cache_mirror, new_vecs, sp: SearchParams, seed):
     rev = RevLog(flat_t.astype(np.int64), flat_new.astype(np.int64),
                  np.asarray(d_edge, np.float32))
 
+    # attribute columns: coerce through the index schema so the WAL
+    # record and the live apply share one validated column form
+    tags = nums = None
+    if backend.attrs is not None:
+        tags, nums = backend.attrs.schema.coerce(attributes, Bi)
+    elif attributes is not None:
+        raise ValueError("attributes passed but no attribute store is "
+                         "attached (set EngineConfig.attributes)")
+
     if backend.wal is not None:
         from repro.core import wal as walmod
-        backend.wal.append(walmod.REC_INSERT, {
-            "ids": ids, "vecs": new_vecs, "sel": sel,
-            "rev_v": rev.v, "rev_vn": rev.v_new, "rev_d": rev.d})
-    apply_insert_tiered(backend, ids, new_vecs, sel, rev, f_lam=f_lam)
+        payload = {"ids": ids, "vecs": new_vecs, "sel": sel,
+                   "rev_v": rev.v, "rev_vn": rev.v_new, "rev_d": rev.d}
+        if tags is not None:
+            payload["tags"], payload["nums"] = tags, nums
+        backend.wal.append(walmod.REC_INSERT, payload)
+    apply_insert_tiered(backend, ids, new_vecs, sel, rev, f_lam=f_lam,
+                        tags=tags, nums=nums)
     return ids, rev
 
 
 def apply_insert_tiered(backend, ids, new_vecs, sel, rev: RevLog,
-                        f_lam=None) -> None:
+                        f_lam=None, tags=None, nums=None) -> None:
     """Mutation half of ``insert_tiered``, shared verbatim with WAL
     replay (``wal.recover``): establish the new vertices, encode their PQ
     codes against the frozen codebook, then apply the logged reverse
@@ -325,6 +343,8 @@ def apply_insert_tiered(backend, ids, new_vecs, sel, rev: RevLog,
     crash_point("mid_memmap_write")   # new rows written, reverse edges not
     if backend.pq is not None:
         backend.pq.encode_write(ids, new_vecs)
+    if backend.attrs is not None and tags is not None:
+        backend.attrs.write(ids, tags, nums)
     backend.alive[ids] = True
     backend.version[ids] = 1
     sel = np.asarray(sel, np.int32)

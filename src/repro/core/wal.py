@@ -283,6 +283,11 @@ def publish_snapshot(dirpath: str, backend, prev_wal: Optional[WriteAheadLog],
         arrays["pq_centroids"] = quant.codebook_to_array(backend.pq.codebook)
         arrays["pq_codes"] = backend.pq.snapshot(n)
         pq_meta = {"m": backend.pq.m, "bits": backend.pq.bits}
+    attrs_meta = None
+    if backend.attrs is not None:
+        tags, nums = backend.attrs.snapshot(n)
+        arrays["attr_tags"], arrays["attr_nums"] = tags, nums
+        attrs_meta = backend.attrs.schema.to_meta()
 
     snap_name = _snapshot_name(epoch)
     snap_tmp = os.path.join(dirpath, snap_name + ".tmp")
@@ -304,6 +309,7 @@ def publish_snapshot(dirpath: str, backend, prev_wal: Optional[WriteAheadLog],
         "n": n, "capacity": int(backend.capacity), "dim": int(backend.dim),
         "degree": int(backend.degree), "snapshot": snap_name,
         "snapshot_crc": zlib.crc32(raw), "wal": wal_name, "pq": pq_meta,
+        "attrs": attrs_meta,
     }
     crash_point("pre_manifest_rename")
     man_tmp = os.path.join(dirpath, MANIFEST + ".tmp")
@@ -343,8 +349,12 @@ def _replay(backend, records) -> None:
     for rtype, _seq, p in records:
         if rtype == REC_INSERT:
             rev = update.RevLog(p["rev_v"], p["rev_vn"], p["rev_d"])
+            # attribute columns ride newer records only; .get keeps
+            # pre-attribute WAL segments replayable
             update.apply_insert_tiered(backend, p["ids"], p["vecs"],
-                                       p["sel"], rev)
+                                       p["sel"], rev,
+                                       tags=p.get("tags"),
+                                       nums=p.get("nums"))
         elif rtype == REC_DELETE:
             update.apply_delete_tiered(backend, p["ids"])
         elif rtype == REC_CONSOLIDATE:
@@ -394,6 +404,15 @@ def recover(dirpath: str, *, host_window: int, group_commit: int = 8,
         cb = quant.codebook_from_array(np.asarray(snap["pq_centroids"]))
         backend.attach_pq(quant.PQCodes(cb, cap,
                                         codes=np.asarray(snap["pq_codes"])))
+    # pre-attribute manifests (no "attrs" key) recover without a store;
+    # the engine attaches an empty one if its config declares a schema
+    if man.get("attrs"):
+        from repro.core.filters import AttributeSchema
+        from repro.core.tiers import AttributeStore
+        schema = AttributeSchema.from_meta(man["attrs"])
+        backend.attach_attrs(AttributeStore(
+            schema, cap, tags=np.asarray(snap["attr_tags"]),
+            nums=np.asarray(snap["attr_nums"])))
 
     wpath = os.path.join(dirpath, man["wal"])
     truncated = 0

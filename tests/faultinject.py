@@ -75,6 +75,9 @@ WORKLOADS = {
 # PQ variants exercise codebook persistence + replay re-encoding
 WORKLOADS["insert_heavy_pq"] = WORKLOADS["insert_heavy"]
 WORKLOADS["consolidation_pq"] = WORKLOADS["consolidation"]
+# attrs variant exercises attribute-store persistence: extended INSERT
+# WAL payloads, snapshot columns, replay re-writes
+WORKLOADS["insert_heavy_attrs"] = WORKLOADS["insert_heavy"]
 
 
 def arm(name: str, hits: int = 1) -> None:
@@ -110,10 +113,22 @@ def dataset() -> np.ndarray:
     return np.random.default_rng(7).normal(size=(N, D)).astype(np.float32)
 
 
-def make_config(disk_path: str, pq: bool):
+def attrs_for(lo: int, hi: int) -> dict:
+    """Deterministic attribute payload for ids [lo, hi) — a pure function
+    of the id so crash / reopen / clean runs agree bit-for-bit."""
+    ids = np.arange(lo, hi)
+    return {"cat": ids % 4, "score": ((ids % 97) / 97).astype(np.float32)}
+
+
+def make_config(disk_path: str, pq: bool, attrs: bool = False):
     from repro.core.engine import EngineConfig
     from repro.core.types import SearchParams
+    schema = None
+    if attrs:
+        from repro.core.filters import AttributeSchema
+        schema = AttributeSchema(tag_fields=("cat",), num_fields=("score",))
     return EngineConfig(
+        attributes=schema,
         degree=8, cache_slots=64, capacity=2048,
         search=SearchParams(k=8, pool=32, max_iters=32),
         disk_path=str(disk_path), disk_capacity=2048, host_window=96,
@@ -138,7 +153,9 @@ def run_ops(eng, data, ops, *, crash_op=None, crash_point=None,
         if crash_op is not None and i == crash_op:
             arm(crash_point)
         if kind == "insert":
-            eng.insert(data[arg[0]:arg[1]])
+            attrs = (attrs_for(*arg) if eng._backend.attrs is not None
+                     else None)
+            eng.insert(data[arg[0]:arg[1]], attributes=attrs)
         elif kind == "delete":
             eng.delete(np.arange(arg[0], arg[1]))
         elif kind == "consolidate":
@@ -172,6 +189,16 @@ def dump_digest(eng, out_path: str, last_seq: int) -> None:
         arrays["pq_codes"] = b.pq.codes[:n].copy()
         from repro.core import quant
         arrays["pq_centroids"] = quant.codebook_to_array(b.pq.codebook)
+    if b.attrs is not None:
+        arrays["attr_tags"], arrays["attr_nums"] = b.attrs.snapshot(n)
+        # a filtered parity search over the recovered attribute columns
+        from repro.core.filters import FilterSpec
+        fres = search_tiered(b, eng._placement, q, SEARCH_SEED,
+                             SearchParams(k=8, pool=32, max_iters=32),
+                             speculate=False,
+                             filter=FilterSpec(tags={"cat": {0, 2}}))
+        arrays["filt_ids"] = np.asarray(fres.ids)
+        arrays["filt_dists"] = np.asarray(fres.dists)
     np.savez(out_path, **arrays)
 
 
@@ -190,10 +217,13 @@ def main(argv=None) -> int:
     from repro.core.engine import SVFusionEngine
     data = dataset()
     ops = WORKLOADS[a.workload]
-    cfg = make_config(a.dir, pq=a.workload.endswith("_pq"))
+    with_attrs = a.workload.endswith("_attrs")
+    cfg = make_config(a.dir, pq=a.workload.endswith("_pq"),
+                      attrs=with_attrs)
+    init_attrs = attrs_for(0, N0) if with_attrs else None
 
     if a.mode == "crash":
-        eng = SVFusionEngine(data[:N0], cfg)
+        eng = SVFusionEngine(data[:N0], cfg, init_attrs=init_attrs)
         run_ops(eng, data, ops, crash_op=a.crash_op,
                 crash_point=a.crash_point)
         return 3                        # armed crash never fired
@@ -205,7 +235,7 @@ def main(argv=None) -> int:
         eng.close()
         return 0
 
-    eng = SVFusionEngine(data[:N0], cfg)         # clean
+    eng = SVFusionEngine(data[:N0], cfg, init_attrs=init_attrs)  # clean
     done = run_ops(eng, data, ops, max_records=a.records)
     if done != a.records:
         print(f"clean run executed {done} record ops, wanted {a.records}",

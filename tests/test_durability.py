@@ -201,6 +201,48 @@ def test_degraded_read_only_on_wal_failure(tmp_path):
     eng.close()                                    # must not raise
 
 
+def test_pre_attribute_manifest_recovers_with_empty_store(tmp_path):
+    """Backward compat: an index published BEFORE the attribute subsystem
+    existed (manifest without an "attrs" key) must recover cleanly — and
+    reopening it with ``cfg.attributes`` set attaches an EMPTY store
+    (schema defaults for every pre-existing id) rather than failing."""
+    import dataclasses as dc
+
+    from repro.core.engine import SVFusionEngine
+    from repro.core.filters import AttributeSchema, FilterSpec
+    eng, cfg, data = _engine(tmp_path)          # no attributes configured
+    eng.insert(data[256:288])
+    eng.close()
+
+    # plain reopen: no attrs in the manifest, no store attached
+    eng2 = SVFusionEngine(None, cfg)
+    assert eng2._backend.attrs is None
+    eng2.close()
+
+    # reopen WITH a schema: empty store attaches, filtered search runs
+    # against all-default columns (tag 0 everywhere)
+    schema = AttributeSchema(tag_fields=("cat",), num_fields=("score",))
+    eng3 = SVFusionEngine(None, dc.replace(cfg, attributes=schema))
+    a = eng3._backend.attrs
+    assert a is not None and a.written == 0
+    assert (a.tags[:eng3._backend.n] == 0).all()
+    ids, _ = eng3.search(data[:2], filter=FilterSpec(tags={"cat": {0}}))
+    assert (np.asarray(ids) >= 0).any()
+    ids, _ = eng3.search(data[:2], filter=FilterSpec(tags={"cat": {3}}))
+    assert (np.asarray(ids) == -1).all()
+    # new inserts carry attributes; a checkpoint upgrades the manifest
+    nid = eng3.insert(data[288:292], attributes={"cat": np.full(4, 3),
+                                                 "score": np.ones(4)})
+    eng3.checkpoint()
+    eng3.close()
+    eng4 = SVFusionEngine(None, dc.replace(cfg, attributes=schema))
+    assert eng4._backend.attrs is not None
+    ids, _ = eng4.search(data[288:290], filter=FilterSpec(tags={"cat": {3}}))
+    live = np.asarray(ids)
+    assert set(live[live >= 0].tolist()) <= set(np.asarray(nid).tolist())
+    eng4.close()
+
+
 def test_checkpoint_rotates_segment(tmp_path):
     eng, cfg, data = _engine(tmp_path)
     store = tmp_path / "store"
@@ -271,6 +313,10 @@ FULL_COMBOS = [
     ("insert_heavy_pq", "pre_manifest_rename", 3),
     ("consolidation_pq", "mid_consolidation_merge", 3),
     ("consolidation_pq", "post_wal_append", 1),
+    # attribute-bearing workload: extended INSERT payload replay +
+    # attribute-column snapshot recovery + filtered-search parity
+    ("insert_heavy_attrs", "post_wal_append", 4),
+    ("insert_heavy_attrs", "mid_memmap_write", 1),
 ]
 
 _CLEAN_DIGESTS = {}
